@@ -1,0 +1,112 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede jax import (same contract as repro.launch.dryrun).
+
+"""Perf hillclimb driver: one (arch x shape) cell, with overrides.
+
+Lowers + compiles the cell on the single-pod mesh with ArchConfig /
+StepOptions overrides applied, derives the scan-corrected roofline terms,
+and prints them next to the recorded baseline -- one hypothesis -> change ->
+measure iteration per invocation (EXPERIMENTS.md §Perf).
+
+  python -m benchmarks.hillclimb --arch granite-20b --shape train_4k \
+      --set pattern_rate=0.5 --opt activation_mode=sp --tag p50_sp
+Results append to experiments/hillclimb/<arch>__<shape>__<tag>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+
+def parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "true"):
+            v = True
+        if v in ("False", "false"):
+            v = False
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override k=v")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="StepOptions override k=v")
+    ap.add_argument("--tag", default="variant")
+    args = ap.parse_args()
+
+    from benchmarks.roofline import analyze
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.launch.dryrun import analyze_cell, cell_path
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import StepOptions, lower_cell
+    from repro.launch import dryrun as DR
+
+    cfg_over = parse_kv(getattr(args, "set"))
+    opt_over = parse_kv(args.opt)
+
+    # patch get_config inside analyze_cell's view by monkey-building a cfg
+    base_cfg = get_config(args.arch)
+    cfg = dataclasses.replace(base_cfg, **cfg_over) if cfg_over else base_cfg
+    opts = StepOptions(**opt_over) if opt_over else StepOptions()
+
+    orig = DR.get_config
+    DR.get_config = lambda name: cfg
+    try:
+        rec = analyze_cell(args.arch, args.shape, multi_pod=False,
+                           calibrate=True, opts=opts)
+    finally:
+        DR.get_config = orig
+    res = analyze(rec)
+
+    # baseline comparison
+    base_path = cell_path("experiments/dryrun", args.arch, args.shape,
+                          "single")
+    base = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            brec = json.load(f)
+        if brec.get("ok"):
+            base = analyze(brec)
+
+    def fmt(r):
+        return (f"compute {r['compute_t']*1e3:8.3f}ms | memory "
+                f"{r['memory_t']*1e3:8.3f}ms | coll {r['collective_t']*1e3:8.3f}ms"
+                f" | bound {r['dominant']:10s} | step {r['step_t']*1e3:8.3f}ms"
+                f" | mem {r['mem_gib']['args']:.1f}+{r['mem_gib']['temp']:.1f}GiB")
+
+    if base:
+        print(f"baseline : {fmt(base)}")
+    print(f"{args.tag:9s}: {fmt(res)}")
+    if base:
+        print(f"dominant-term delta: "
+              f"{base[base['dominant'] + '_t']*1e3:.3f}ms -> "
+              f"{res[base['dominant'] + '_t']*1e3:.3f}ms "
+              f"({res[base['dominant'] + '_t']/base[base['dominant'] + '_t']:.3f}x); "
+              f"step {base['step_t']*1e3:.3f} -> {res['step_t']*1e3:.3f}ms")
+
+    outdir = "experiments/hillclimb"
+    os.makedirs(outdir, exist_ok=True)
+    res["overrides"] = {"cfg": cfg_over, "opts": opt_over}
+    res["tag"] = args.tag
+    with open(os.path.join(
+            outdir, f"{args.arch}__{args.shape}__{args.tag}.json"), "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

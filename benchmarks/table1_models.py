@@ -1,0 +1,181 @@
+"""Table I reproduction: train the paper's 4 benchmark models.
+
+Trains MLP-4/MLP-3/KAN-3/KAN-2 on the synthetic Traffic surrogate
+(72h -> 96h, channel-independent, 7:2:1 split, Adam lr=1e-3, 100 epochs --
+the paper's protocol) and reports MSE / RSE / MAE + parameter counts.
+
+Expected qualitative claim to reproduce: KANs match/beat the MLPs at ~1/3
+the parameters.  Absolute errors differ from the paper (synthetic data;
+DESIGN.md Sec. 8).
+
+Artifacts for downstream benchmarks (figs 6-8, table II):
+  experiments/table1.json   -- metrics + measured post-ReLU nnz rates
+  experiments/paper_models.npz -- trained weights
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vikin_models import PAPER_MODELS, PaperModelConfig
+from repro.core.kan import KANConfig, kan_apply, kan_init
+from repro.core.splines import SplineSpec
+from repro.data.traffic import TrafficConfig, batches, load_traffic, mae, \
+    mse, rse
+from repro.optim import AdamWConfig, adamw_init, adamw_update, \
+    constant_schedule
+
+EXP_DIR = "experiments"
+
+
+# ---------------------------------------------------------------------------
+# Models (functional)
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: PaperModelConfig):
+    ks = jax.random.split(key, len(cfg.sizes))
+    params = []
+    if cfg.kind == "mlp":
+        for i, (a, b) in enumerate(zip(cfg.sizes, cfg.sizes[1:])):
+            params.append({
+                "w": jax.random.normal(ks[i], (a, b)) * np.sqrt(2.0 / a),
+                "b": jnp.zeros((b,)),
+            })
+    else:
+        for i, (a, b) in enumerate(zip(cfg.sizes, cfg.sizes[1:])):
+            params.append(kan_init(ks[i], KANConfig(a, b, cfg.spec)))
+    return params
+
+
+def apply_model(params, x, cfg: PaperModelConfig,
+                collect_nnz: bool = False):
+    """x in [0,1].  Returns (y, hidden_nnz_rates)."""
+    nnz: List[jax.Array] = []
+    h = x
+    if cfg.kind == "mlp":
+        for i, p in enumerate(params):
+            h = h @ p["w"] + p["b"]
+            if i < len(params) - 1:
+                h = jax.nn.relu(h)
+                if collect_nnz:
+                    nnz.append(jnp.mean((h > 0).astype(jnp.float32)))
+    else:
+        h = 2.0 * h - 1.0                        # map into the spline grid
+        for i, p in enumerate(params):
+            a, b = cfg.sizes[i], cfg.sizes[i + 1]
+            h = kan_apply(p, h, KANConfig(a, b, cfg.spec))
+    return h, nnz
+
+
+def train_model(cfg: PaperModelConfig, data: Dict[str, np.ndarray],
+                epochs: int, seed: int = 0, batch_size: int = 512,
+                lr: float = 1e-3):
+    params = init_model(jax.random.key(seed), cfg)
+    opt_cfg = AdamWConfig(lr=constant_schedule(lr), weight_decay=0.0,
+                          grad_clip_norm=None)
+    state = adamw_init(params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss_fn(p):
+            pred, _ = apply_model(p, xb, cfg)
+            return jnp.mean((pred - yb) ** 2)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = adamw_update(g, state, params, opt_cfg)
+        return params, state, loss
+
+    t0 = time.time()
+    n_steps = 0
+    for ep in range(epochs):
+        for xb, yb in batches(data["train_x"], data["train_y"], batch_size,
+                              seed=seed * 1000 + ep):
+            params, state, loss = step(params, state, jnp.asarray(xb),
+                                       jnp.asarray(yb))
+            n_steps += 1
+    train_s = time.time() - t0
+
+    @jax.jit
+    def predict(params, x):
+        return apply_model(params, x, cfg, collect_nnz=True)
+
+    pred, nnz = predict(params, jnp.asarray(data["test_x"]))
+    pred = np.asarray(pred)
+    metrics = {
+        "mse": mse(pred, data["test_y"]),
+        "rse": rse(pred, data["test_y"]),
+        "mae": mae(pred, data["test_y"]),
+        "params": cfg.param_count(),
+        "nnz_rates": [float(v) for v in nnz],
+        "train_s": round(train_s, 1),
+        "us_per_step": round(train_s / max(n_steps, 1) * 1e6, 1),
+        "epochs": epochs,
+    }
+    return params, metrics
+
+
+def run(epochs: int = 100, seed: int = 0,
+        data_cfg: TrafficConfig = TrafficConfig()) -> Dict[str, Dict]:
+    data = load_traffic(data_cfg)
+    results, weights = {}, {}
+    for name, cfg in PAPER_MODELS.items():
+        params, metrics = train_model(cfg, data, epochs, seed)
+        results[name] = metrics
+        for i, layer in enumerate(params):
+            for k, v in layer.items():
+                weights[f"{name}/{i}/{k}"] = np.asarray(v)
+        print(f"{name:12s} params={metrics['params']:7d} "
+              f"MSE={metrics['mse']:.3e} RSE={metrics['rse']:.3f} "
+              f"MAE={metrics['mae']:.3e} nnz={metrics['nnz_rates']}",
+              flush=True)
+
+    os.makedirs(EXP_DIR, exist_ok=True)
+    with open(os.path.join(EXP_DIR, "table1.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    np.savez(os.path.join(EXP_DIR, "paper_models.npz"), **weights)
+
+    # headline claims of Table I
+    k3, m4 = results["kan-3layer"], results["mlp-4layer"]
+    print(f"\nKAN-3 vs MLP-4: params {k3['params']/m4['params']:.2f}x "
+          f"(paper 0.30x), MSE ratio {k3['mse']/m4['mse']:.2f} "
+          f"(paper 0.74)")
+    return results
+
+
+def load_trained(name: str) -> Tuple[PaperModelConfig, list]:
+    """Reload trained weights for downstream benchmarks."""
+    cfg = PAPER_MODELS[name]
+    z = np.load(os.path.join(EXP_DIR, "paper_models.npz"))
+    params = []
+    for i in range(len(cfg.sizes) - 1):
+        layer = {}
+        for key in z.files:
+            mname, idx, pname = key.split("/")
+            if mname == name and int(idx) == i:
+                layer[pname] = jnp.asarray(z[key])
+        params.append(layer)
+    return cfg, params
+
+
+def ensure_trained(epochs: int = 100):
+    path = os.path.join(EXP_DIR, "table1.json")
+    if not (os.path.exists(path)
+            and os.path.exists(os.path.join(EXP_DIR, "paper_models.npz"))):
+        run(epochs=epochs)
+    with open(path) as f:
+        return json.load(f)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(epochs=args.epochs, seed=args.seed)

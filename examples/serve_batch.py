@@ -1,0 +1,45 @@
+"""Batched serving demo: slot-based continuous batching with KV caches.
+
+Submits a burst of requests with different prompt lengths to the Server;
+the engine admits them into free cache slots, decodes one token per tick
+for every active slot in a single jitted step, and recycles slots as
+requests finish -- the vLLM-style execution contract scaled to CPU.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.runtime.server import Server
+
+
+def main():
+    cfg = get_config("qwen2-0.5b").reduce(n_layers=4, d_model=128,
+                                          d_ff=256, vocab_size=512)
+    params = T.init_params(jax.random.key(0), cfg)
+    srv = Server(cfg, params, n_slots=4, max_len=128)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 12, 3, 9, 7, 15)]   # 6 requests, 4 slots
+    t0 = time.time()
+    rids = [srv.submit(p, max_new_tokens=12) for p in prompts]
+    out = srv.run_until_done()
+    dt = time.time() - t0
+
+    total_tokens = sum(len(v) for v in out.values())
+    for rid, p in zip(rids, prompts):
+        print(f"req {rid}: prompt[{len(p):2d}] -> {out[rid]}")
+    print(f"\n{len(prompts)} requests over 4 slots, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

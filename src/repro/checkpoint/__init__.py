@@ -1,0 +1,10 @@
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    all_steps,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["AsyncCheckpointer", "all_steps", "latest_step",
+           "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.configs import (
+    granite_20b,
+    llama4_scout_17b_a16e,
+    mistral_nemo_12b,
+    paligemma_3b,
+    qwen1_5_0_5b,
+    qwen2_0_5b,
+    qwen3_moe_235b_a22b,
+    recurrentgemma_9b,
+    whisper_medium,
+    xlstm_125m,
+)
+
+_MODULES = (
+    xlstm_125m, qwen3_moe_235b_a22b, llama4_scout_17b_a16e,
+    mistral_nemo_12b, qwen1_5_0_5b, qwen2_0_5b, granite_20b,
+    paligemma_3b, whisper_medium, recurrentgemma_9b,
+)
+
+ARCHS: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def runnable_cells(include_skipped: bool = False) -> List[tuple]:
+    """All (arch, shape) cells; long_500k only for sub-quadratic archs
+    (the documented skip, DESIGN.md Sec. 5)."""
+    cells = []
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            skipped = (sname == "long_500k" and not cfg.subquadratic)
+            if skipped and not include_skipped:
+                continue
+            cells.append((aname, sname))
+    return cells

@@ -1,0 +1,50 @@
+"""The paper's own benchmark models (Table I) as configs.
+
+Four models on the Traffic 72h->96h forecasting task:
+  MLP-4 [72,304,304,96], MLP-3 [72,304,96]   (ReLU, fixed)
+  KAN-3 [72,32,96], KAN-2 [72,96]            (silu + B-spline, G=4 K=3)
+
+These drive benchmarks/table1_models.py (training + error metrics) and the
+VIKIN cycle-model benchmarks (Figs. 6-8, Table II).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.core.splines import SplineSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperModelConfig:
+    name: str
+    kind: str                      # "mlp" | "kan"
+    sizes: Tuple[int, ...]
+    grid: int = 4
+    order: int = 3
+    pattern_rate: float = 0.0      # Table II deployment rates
+
+    @property
+    def spec(self) -> SplineSpec:
+        return SplineSpec(self.grid, self.order)
+
+    def param_count(self) -> int:
+        n = 0
+        for a, b in zip(self.sizes, self.sizes[1:]):
+            if self.kind == "mlp":
+                n += a * b + b
+            else:
+                n += a * b * (1 + self.spec.n_bases)
+        return n
+
+
+MLP4 = PaperModelConfig("mlp-4layer", "mlp", (72, 304, 304, 96))
+MLP3 = PaperModelConfig("mlp-3layer", "mlp", (72, 304, 96))
+KAN3 = PaperModelConfig("kan-3layer", "kan", (72, 32, 96))
+KAN2 = PaperModelConfig("kan-2layer", "kan", (72, 96))
+
+PAPER_MODELS = {m.name: m for m in (MLP4, MLP3, KAN3, KAN2)}
+
+# Table II deployment configuration
+TABLE2_KAN = dataclasses.replace(KAN2, pattern_rate=0.5)
+TABLE2_MLP = dataclasses.replace(MLP3, pattern_rate=0.25)

@@ -1,0 +1,72 @@
+"""VIKIN's reconfigurable operation modes as a dispatch abstraction.
+
+On the FPGA, "mode" chooses an interconnect configuration: pipeline
+(SIMD -> SPU -> TSE -> PE) for KANs vs parallel (TSE -> {SPU-as-PE, PE}) for
+MLPs.  On TPU, reconfigurability is dispatch: one code path serves both layer
+types with shared kernels, which is the analogue of reusing silicon.
+
+* PIPELINE  -> KAN layers lower to the fused kernel (kan_fused): silu + SPU
+              basis recursion + TSE scatter + MAC in one VMEM residency.
+* PARALLEL  -> MLP layers lower to the pattern-sparse matmul
+              (pattern_matmul) with fused activation epilogue; the "SPU
+              doubles the PE count" effect is a throughput property of the
+              FPGA reproduced in the cycle model (core/engine.py).
+
+``ModePlan.for_layers`` mirrors the host processor's role in the paper: it
+inspects the workload (a sequence of layer kinds) and issues the mode switch
+schedule, charging a reconfiguration overhead whenever the mode flips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Sequence, Tuple
+
+
+class ExecMode(enum.Enum):
+    PIPELINE = "pipeline"   # KAN dataflow
+    PARALLEL = "parallel"   # MLP dataflow
+
+
+class LayerKind(enum.Enum):
+    KAN = "kan"
+    MLP = "mlp"
+
+
+MODE_FOR_KIND = {LayerKind.KAN: ExecMode.PIPELINE, LayerKind.MLP: ExecMode.PARALLEL}
+
+# Interconnect reconfiguration cost, cycles (buffer drain + mux switch).
+# Charged by the cycle model on every mode flip; "minimal reconfiguration
+# overhead" per paper Sec. IV-A.
+RECONFIG_CYCLES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModePlan:
+    """Mode schedule for a workload: one entry per layer + flip positions."""
+
+    modes: Tuple[ExecMode, ...]
+
+    @classmethod
+    def for_layers(cls, kinds: Sequence[LayerKind]) -> "ModePlan":
+        return cls(tuple(MODE_FOR_KIND[k] for k in kinds))
+
+    @property
+    def n_switches(self) -> int:
+        return sum(
+            1 for a, b in zip(self.modes, self.modes[1:]) if a is not b
+        )
+
+    @property
+    def reconfig_cycles(self) -> int:
+        return self.n_switches * RECONFIG_CYCLES
+
+    def segments(self) -> List[Tuple[ExecMode, int]]:
+        """Run-length encoding: [(mode, n_layers), ...]."""
+        out: List[Tuple[ExecMode, int]] = []
+        for m in self.modes:
+            if out and out[-1][0] is m:
+                out[-1] = (m, out[-1][1] + 1)
+            else:
+                out.append((m, 1))
+        return out

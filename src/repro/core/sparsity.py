@@ -1,0 +1,155 @@
+"""Two-stage sparsity support (paper Sec. IV-C), TPU adaptation.
+
+Stage 1 -- *zero-free* (Cnvlutin-style [19]): B-spline local support means only
+K+1 of the G+K bases are non-zero per input.  On VIKIN the TSE compacts the
+SPU output stream to (value, offset) pairs; on TPU this is realized
+structurally: ``bases_local`` computes only the K+1 values in the first place
+(VPU-op saving) and the fused kernel never materializes the dense basis
+tensor in HBM.  Dynamic per-element skipping of the MAC itself does NOT
+transfer to a systolic MXU; that part of the win is reproduced in the cycle
+model (`core/engine.py`) and documented in DESIGN.md.
+
+Stage 2 -- *pattern sparsity*: a mask over groups of 4 nodes fixed at training
+time ([23], [24]).  Because the mask is batch-uniform, on TPU it becomes
+STATIC column compaction: weight rows for masked-out nodes are physically
+removed and the contraction dimension shrinks by keep/4 -- a real MXU saving,
+the TPU analogue of 2:4 structured sparsity.  Masks come in two flavours:
+
+* ``tiled``   -- one 4-bit pattern repeated over the dimension (the paper's
+                 "1 0 1 0" example).  Uniform per group -> the fused KAN
+                 kernel can compact its scatter too.
+* ``grouped`` -- independent m-of-4 choice per group (magnitude-based, Wanda
+                 style [24]).  Compaction still static, per-group indices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GROUP = 4  # the TSE filters elements in batches of four (paper Sec. IV-C)
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternMask:
+    """A static m-of-4 sparsity mask over one tensor dimension.
+
+    ``keep`` is a bool np.ndarray (host-side: masks are compile-time
+    constants, never traced).  ``n`` may not be divisible by 4; the trailing
+    partial group is always fully kept.
+    """
+
+    keep: np.ndarray  # (n,) bool
+
+    def __post_init__(self):
+        assert self.keep.dtype == np.bool_ and self.keep.ndim == 1
+
+    @property
+    def n(self) -> int:
+        return int(self.keep.shape[0])
+
+    @property
+    def n_keep(self) -> int:
+        return int(self.keep.sum())
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.n_keep / self.n
+
+    def indices(self) -> np.ndarray:
+        """Static gather indices of kept positions (host numpy)."""
+        return np.nonzero(self.keep)[0].astype(np.int32)
+
+    def as_jnp(self, dtype=jnp.float32) -> jax.Array:
+        return jnp.asarray(self.keep.astype(np.float32), dtype)
+
+    def is_tiled(self) -> Optional[np.ndarray]:
+        """Return the 4-bit pattern if this mask is one pattern tiled, else None."""
+        full = (self.n // GROUP) * GROUP
+        if full == 0:
+            return None
+        g = self.keep[:full].reshape(-1, GROUP)
+        if (g == g[0]).all() and self.keep[full:].all():
+            return g[0].copy()
+        return None
+
+
+def tiled_mask(n: int, pattern: Tuple[int, ...]) -> PatternMask:
+    """Tile one 4-bit pattern (e.g. (1,0,1,0)) across an n-wide dimension."""
+    assert len(pattern) == GROUP
+    reps = -(-n // GROUP)
+    keep = np.tile(np.asarray(pattern, bool), reps)[:n].copy()
+    keep[(n // GROUP) * GROUP:] = True  # partial trailing group fully kept
+    return PatternMask(keep)
+
+
+def sparsity_to_pattern(rate: float) -> Tuple[int, ...]:
+    """Paper sweep points: 0/25/50/75% -> 4/3/2/1-of-4 patterns."""
+    table = {0.0: (1, 1, 1, 1), 0.25: (1, 1, 1, 0), 0.5: (1, 0, 1, 0),
+             0.75: (1, 0, 0, 0)}
+    if rate not in table:
+        raise ValueError(f"pattern sparsity rate must be in {sorted(table)}")
+    return table[rate]
+
+
+def magnitude_mask(saliency: np.ndarray, keep_per_group: int) -> PatternMask:
+    """m-of-4 mask keeping the highest-saliency entries per group ([23,24]).
+
+    ``saliency`` is any per-node importance score, e.g. sum|W| over the
+    fan-out (Wanda-style) -- computed offline from trained weights.
+    """
+    n = saliency.shape[0]
+    keep = np.ones(n, bool)
+    full = (n // GROUP) * GROUP
+    g = saliency[:full].reshape(-1, GROUP)
+    order = np.argsort(-g, axis=1)  # descending
+    gkeep = np.zeros_like(g, dtype=bool)
+    np.put_along_axis(gkeep, order[:, :keep_per_group], True, axis=1)
+    keep[:full] = gkeep.reshape(-1)
+    return PatternMask(keep)
+
+
+def weight_saliency(w: np.ndarray, axis_out: int = -1) -> np.ndarray:
+    """Fan-out L1 saliency of each input node of a weight matrix."""
+    return np.abs(w).sum(axis=axis_out)
+
+
+# ---------------------------------------------------------------------------
+# Static compaction (the TPU realization of the TSE's stage-2 filter).
+# ---------------------------------------------------------------------------
+
+def compact_rows(w: jax.Array, mask: PatternMask) -> jax.Array:
+    """Drop weight rows (contraction-dim entries) that the mask removes."""
+    return jnp.take(w, jnp.asarray(mask.indices()), axis=0)
+
+
+def compact_cols_activation(x: jax.Array, mask: PatternMask) -> jax.Array:
+    """Gather kept activation lanes (static indices -> XLA slices/copies)."""
+    return jnp.take(x, jnp.asarray(mask.indices()), axis=-1)
+
+
+def apply_mask(x: jax.Array, mask: PatternMask) -> jax.Array:
+    """Multiplicative form (semantics oracle): zero masked-out lanes."""
+    return x * mask.as_jnp(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sparsity statistics (feed the VIKIN cycle model with measured rates).
+# ---------------------------------------------------------------------------
+
+def activation_nnz_rate(x: jax.Array, atol: float = 0.0) -> float:
+    """Fraction of non-zero activations (ReLU streams etc.)."""
+    return float(jnp.mean((jnp.abs(x) > atol).astype(jnp.float32)))
+
+
+def spline_nnz_rate(grid_size: int, order: int) -> float:
+    """Structural non-zero fraction of a B-spline basis vector: (K+1)/(G+K)."""
+    return (order + 1) / (grid_size + order)
+
+
+def combined_keep_rate(structural: float, pattern: float) -> float:
+    """Expected node keep-rate after both stages (independent filters)."""
+    return structural * (1.0 - pattern)

@@ -1,0 +1,240 @@
+"""B-spline machinery for KANs (paper Eq. 4-5), TPU-adapted.
+
+VIKIN restricts grid size G to {2,4,8,16} and spline order K to {1,2,3,4} so
+that the Cox-de Boor divisions become integer operations plus a LUT for 1/3
+(paper Sec. IV-B).  On a *uniform* grid the de Boor denominators are exactly
+the integers 1..K (the knot spacing h cancels), so the reciprocal LUT
+``INV_LUT = [1, 1/2, 1/3, 1/4]`` is the faithful TPU realization of that
+hardware trick: no division appears anywhere in the inner recursion.
+
+Two evaluation paths are provided:
+
+* ``bases_dense``   -- textbook Cox-de Boor over all G+K bases (EfficientKAN
+                       computation paradigm).  This is the oracle.
+* ``bases_local``   -- the VIKIN SPU path: locate the knot cell with one
+                       multiply+floor (integer interval location), then run
+                       the de Boor recursion only over the K+1 bases that are
+                       structurally non-zero (stage-1 "zero-free" sparsity).
+                       Knot differences (``x - x_i`` / ``x_{i+K+1} - x``) are
+                       computed once at order 0 and reused across orders --
+                       the paper's *stage buffer* (-21% op count).
+
+``scatter_local`` reconstructs the dense basis vector from the local one; the
+pair (``bases_local``, ``scatter_local``) is exactly the SPU -> TSE hand-off
+of the paper, and ``bases_dense == scatter_local(bases_local)`` for every
+in-range input (property-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VALID_G = (2, 4, 8, 16)
+VALID_K = (1, 2, 3, 4)
+
+# Reciprocal LUT replacing FP division in the de Boor recursion (paper: G,K
+# restricted so "costly FP divisions ... replaced with integer operations and
+# an LUT for the value 1/3").  Index j holds 1/j.
+INV_LUT = (0.0, 1.0, 0.5, 1.0 / 3.0, 0.25)
+
+
+@dataclasses.dataclass(frozen=True)
+class SplineSpec:
+    """Static configuration of a B-spline basis set (one KAN layer)."""
+
+    grid_size: int = 4          # G: knot intervals inside [x0, x1]
+    order: int = 3              # K: spline order (degree)
+    x0: float = -1.0
+    x1: float = 1.0
+
+    def __post_init__(self):
+        if self.grid_size not in VALID_G:
+            raise ValueError(f"G must be one of {VALID_G}, got {self.grid_size}")
+        if self.order not in VALID_K:
+            raise ValueError(f"K must be one of {VALID_K}, got {self.order}")
+        if not self.x1 > self.x0:
+            raise ValueError("x1 must exceed x0")
+
+    @property
+    def n_bases(self) -> int:
+        """Number of basis functions B_i(x): G + K."""
+        return self.grid_size + self.order
+
+    @property
+    def n_active(self) -> int:
+        """Bases with non-zero value at any x: K + 1 (local support)."""
+        return self.order + 1
+
+    @property
+    def h(self) -> float:
+        """Knot spacing."""
+        return (self.x1 - self.x0) / self.grid_size
+
+    @property
+    def inv_h(self) -> float:
+        return self.grid_size / (self.x1 - self.x0)
+
+    def knots(self) -> np.ndarray:
+        """Extended uniform knot vector: G + 2K + 1 knots.
+
+        t_j = x0 + (j - K) * h for j = 0 .. G+2K; basis i is supported on
+        [t_i, t_{i+K+1}).
+        """
+        j = np.arange(self.grid_size + 2 * self.order + 1)
+        return self.x0 + (j - self.order) * self.h
+
+    def clip(self, x: jax.Array) -> jax.Array:
+        """Clip inputs into the grid's supported range [x0, x1)."""
+        eps = 1e-6 * (self.x1 - self.x0)
+        return jnp.clip(x, self.x0, self.x1 - eps)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    """silu(x) = x * sigmoid(x) (paper Eq. 2)."""
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Dense oracle: Cox-de Boor over all G+K bases (EfficientKAN paradigm).
+# ---------------------------------------------------------------------------
+
+def bases_dense(x: jax.Array, spec: SplineSpec) -> jax.Array:
+    """All G+K basis values at x.  Shape: x.shape + (G+K,).
+
+    Direct transcription of paper Eqs. 4-5 over the extended knot vector.
+    This is the pure-jnp oracle every kernel is validated against.
+    """
+    t = jnp.asarray(spec.knots(), dtype=x.dtype)  # (G+2K+1,)
+    xe = x[..., None]
+    # Order 0: indicator of the knot interval (Eq. 4).  G+2K bases.
+    b = ((xe >= t[:-1]) & (xe < t[1:])).astype(x.dtype)
+    for k in range(1, spec.order + 1):
+        # Eq. 5; uniform knots => denominators are k*h (never zero).
+        left = (xe - t[: -(k + 1)]) / (t[k:-1] - t[: -(k + 1)])
+        right = (t[k + 1:] - xe) / (t[k + 1:] - t[1:-k])
+        b = left * b[..., :-1] + right * b[..., 1:]
+    return b  # x.shape + (G+K,)
+
+
+# ---------------------------------------------------------------------------
+# Local (densified) path: the SPU with stage buffer + zero-free output.
+# ---------------------------------------------------------------------------
+
+def locate_cell(x: jax.Array, spec: SplineSpec) -> Tuple[jax.Array, jax.Array]:
+    """Knot-interval location by multiply + floor (no division, no search).
+
+    Returns (cell, r): cell in [0, G-1] (int32) such that the non-zero bases
+    at x are indices cell .. cell+K of the dense vector, and r in [0, 1) the
+    position of x inside that cell in knot units.
+
+    Interval location runs in f32 even for bf16 inputs: VIKIN does it in
+    exact fixed-point arithmetic, and the ``u - cell`` cancellation is
+    catastrophic at 8-bit mantissa for G=16 (r error up to 2^-5).
+    """
+    xf = x.astype(jnp.float32)
+    u = (xf - spec.x0) * jnp.asarray(spec.inv_h, jnp.float32)
+    cell = jnp.clip(jnp.floor(u), 0, spec.grid_size - 1)
+    r = (u - cell).astype(x.dtype)
+    return cell.astype(jnp.int32), r
+
+
+def bases_local(x: jax.Array, spec: SplineSpec) -> Tuple[jax.Array, jax.Array]:
+    """The K+1 structurally non-zero basis values at x, plus their offset.
+
+    Returns (vals, cell): vals has shape x.shape + (K+1,), and
+    vals[..., j] == bases_dense(x)[..., cell + j] for in-range x.
+
+    This is the SPU inner loop (paper Fig. 4):
+      * knot differences are formed ONCE from r (the stage buffer) and reused
+        by every order of the recursion (-21% workload);
+      * denominators are the integers 1..K -> INV_LUT, no FP division;
+      * only K+1 values are produced (zero-free output, stage-1 sparsity).
+    """
+    K = spec.order
+    cell, r = locate_cell(x, spec)
+    # Stage buffer: right[d] = (d+1) - r, left[d] = r + d, for d = 0..K-1.
+    # These are the (x_{i+1}-x)/h and (x - x_i)/h knot differences of Eq. 5,
+    # computed once at order 0 and reused across all higher orders.
+    d = jnp.arange(K, dtype=x.dtype)
+    right = (d + 1.0) - r[..., None]          # x.shape + (K,)
+    left = r[..., None] + d                   # x.shape + (K,)
+
+    vals = [jnp.ones_like(r)] + [jnp.zeros_like(r) for _ in range(K)]
+    for j in range(1, K + 1):
+        inv = jnp.asarray(INV_LUT[j], x.dtype)   # 1/j from the LUT
+        saved = jnp.zeros_like(r)
+        for rr in range(j):
+            temp = vals[rr] * inv
+            vals[rr] = saved + right[..., rr] * temp
+            saved = left[..., j - rr - 1] * temp
+        vals[j] = saved
+    return jnp.stack(vals, axis=-1), cell
+
+
+def scatter_local(vals: jax.Array, cell: jax.Array, spec: SplineSpec) -> jax.Array:
+    """TSE inverse: place the K+1 local values into the dense G+K vector.
+
+    Mask-compare scatter (no dynamic indexing -- TPU/VPU friendly).
+    """
+    idx = jnp.arange(spec.n_bases, dtype=jnp.int32)       # (G+K,)
+    delta = idx - cell[..., None]                          # x.shape + (G+K,)
+    dense = jnp.zeros(vals.shape[:-1] + (spec.n_bases,), vals.dtype)
+    for j in range(spec.n_active):
+        dense = dense + jnp.where(delta == j, vals[..., j:j + 1], 0.0)
+    return dense
+
+
+def gather_local(dense: jax.Array, cell: jax.Array, spec: SplineSpec) -> jax.Array:
+    """Inverse of ``scatter_local`` (used in tests)."""
+    out = []
+    idx = jnp.arange(spec.n_bases, dtype=jnp.int32)
+    for j in range(spec.n_active):
+        sel = (idx == cell[..., None] + j).astype(dense.dtype)
+        out.append(jnp.sum(dense * sel, axis=-1))
+    return jnp.stack(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Operation counting (feeds the VIKIN cycle model and roofline analysis).
+# ---------------------------------------------------------------------------
+
+def spu_op_count(spec: SplineSpec, stage_buffer: bool = True) -> int:
+    """VPU/SPU scalar-op count to evaluate the basis set for ONE input.
+
+    ``stage_buffer=False`` recomputes the knot differences at every order
+    (the naive recursion); ``True`` forms them once and reuses them, which is
+    the paper's -21% optimization.  Counts multiplies+adds+subs.
+    """
+    K = spec.order
+    # Cell location: 1 sub + 1 mul + 1 floor + 1 sub (r) ~= 4 ops.
+    ops = 4
+    diffs = 2 * K  # stage buffer fill: K rights + K lefts, 1 sub/add each
+    if stage_buffer:
+        ops += diffs
+    for j in range(1, K + 1):
+        for _ in range(j):
+            # temp = N*inv; N = saved + right*temp; saved = left*temp
+            ops += 5
+            if not stage_buffer:
+                ops += 2  # recompute the two knot differences
+    return ops
+
+
+def dense_eval_op_count(spec: SplineSpec) -> int:
+    """Ops to evaluate ALL G+K bases by the dense recursion (no sparsity).
+
+    This is what a non-VIKIN implementation pays per input; the ratio against
+    ``spu_op_count`` is the stage-1 (zero-free) compute saving.
+    """
+    G, K = spec.grid_size, spec.order
+    ops = G + 2 * K  # order-0 indicators (one compare-pair each)
+    n = G + 2 * K
+    for k in range(1, K + 1):
+        n -= 1
+        ops += n * 6   # two ratio terms (sub+mul each) + two muls... per Eq.5
+    return ops

@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: VIKIN *pipeline mode* as one fused VMEM pass.
+
+On the FPGA, pipeline mode chains SIMD (silu) -> SPU array (bases) -> TSE
+(zero-free compaction + pattern filter) -> PE array (MAC) so the sparse
+(B, n_in, G+K) intermediate never leaves the datapath.  The TPU-native
+equivalent is kernel fusion: one pallas_call computes, per (bm x bn) output
+tile and bi-wide input-feature chunk,
+
+  1. SIMD:  silu(x) on the VPU,
+  2. SPU :  the K+1 non-zero basis values via the stage-buffer de Boor
+            recursion (INV_LUT reciprocals, f32 interval location),
+  3. TSE :  mask-compare scatter of those values directly into the
+            *compacted* activation layout -- when the stage-2 pattern mask is
+            a tiled 4-bit pattern, only the kept basis columns are ever
+            produced, so the MXU contraction below shrinks by keep/4
+            (real stage-2 saving, batch-uniform),
+  4. PE  :  two MXU contractions accumulated in fp32 VMEM scratch:
+            silu(x) @ w_b  and  act_scattered @ t_compact.
+
+The (B, n_in*(G+K)) intermediate never touches HBM: that is the pipeline.
+
+Weight layout: t_flat is (n_in * nbk, n_out), rows grouped by input feature,
+basis-index fastest -- matches the scatter's (bm, bi, nbk) -> (bm, bi*nbk)
+flatten.  kb (kept basis indices, static tuple) selects which of the G+K
+columns exist; kb = range(G+K) when no pattern mask is set.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.splines import INV_LUT, SplineSpec
+
+DEFAULT_BM = 128
+DEFAULT_BI = 64
+DEFAULT_BN = 128
+
+
+def _kan_kernel(
+    x_ref, wb_ref, t_ref, o_ref, acc_ref,
+    *, spec: SplineSpec, kb: Tuple[int, ...], i_steps: int,
+):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                       # (bm, bi)
+    dtype = x.dtype
+    K = spec.order
+    nbk = len(kb)
+
+    # --- SIMD core: silu branch (raw, un-clipped input; Eq. 3). -----------
+    xf32 = x.astype(jnp.float32)
+    s = (xf32 * jax.lax.logistic(xf32)).astype(dtype)
+    acc_ref[...] += jnp.dot(s, wb_ref[...], preferred_element_type=jnp.float32)
+
+    # --- SPU array: interval location (f32, exact) + stage-buffer de Boor.
+    eps = 1e-6 * (spec.x1 - spec.x0)
+    xc = jnp.clip(xf32, spec.x0, spec.x1 - eps)
+    u = (xc - spec.x0) * jnp.asarray(spec.inv_h, jnp.float32)
+    cell = jnp.clip(jnp.floor(u), 0, spec.grid_size - 1)
+    r = (u - cell).astype(dtype)
+    cell_i = cell.astype(jnp.int32)      # (bm, bi)
+
+    rights = [jnp.asarray(d + 1.0, dtype) - r for d in range(K)]   # stage buf
+    lefts = [r + jnp.asarray(d, dtype) for d in range(K)]
+    vals = [jnp.ones_like(r)] + [jnp.zeros_like(r) for _ in range(K)]
+    for j in range(1, K + 1):
+        inv = jnp.asarray(INV_LUT[j], dtype)
+        saved = jnp.zeros_like(r)
+        for rr in range(j):
+            temp = vals[rr] * inv
+            vals[rr] = saved + rights[rr] * temp
+            saved = lefts[j - rr - 1] * temp
+        vals[j] = saved
+
+    # --- TSE: scatter the K+1 values into the kept-basis columns only. ----
+    # kb entries are static Python ints (scalar literals in the kernel);
+    # pallas forbids captured constant *arrays*, so the scatter is unrolled
+    # over the <=20 kept columns.
+    cols = []
+    for q_idx in kb:
+        dq = q_idx - cell_i                               # (bm, bi)
+        col = jnp.zeros_like(r)
+        for j in range(K + 1):
+            col = col + jnp.where(dq == j, vals[j], 0.0)
+        cols.append(col)
+    act = jnp.stack(cols, axis=-1)                        # (bm, bi, nbk)
+
+    # --- PE array: MAC against the compacted spline weights. --------------
+    bm, bi = x.shape
+    act2 = act.reshape(bm, bi * nbk)
+    acc_ref[...] += jnp.dot(
+        act2, t_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(i == i_steps - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "kb", "bm", "bi", "bn", "interpret"),
+)
+def kan_fused_pallas(
+    x: jax.Array,            # (B, n_in)
+    w_b: jax.Array,          # (n_in, n_out)
+    t_flat: jax.Array,       # (n_in * nbk, n_out), feature-major rows
+    spec: SplineSpec,
+    kb: Optional[Tuple[int, ...]] = None,
+    *,
+    bm: int = DEFAULT_BM,
+    bi: int = DEFAULT_BI,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    B, n_in = x.shape
+    n_out = w_b.shape[1]
+    kb = tuple(range(spec.n_bases)) if kb is None else tuple(kb)
+    nbk = len(kb)
+    assert t_flat.shape == (n_in * nbk, n_out), (t_flat.shape, n_in, nbk)
+
+    bm = min(bm, max(8, B))
+    bi = min(bi, n_in)
+    bn = min(bn, n_out)
+    pb, pi, pn = -B % bm, -n_in % bi, -n_out % bn
+    # Pad inputs with x0 (in-range) and weights with zeros: contributes
+    # nothing because the padded w_b/t rows are zero.
+    xp = jnp.pad(x, ((0, pb), (0, pi)), constant_values=spec.x0)
+    wbp = jnp.pad(w_b, ((0, pi), (0, pn)))
+    tp = jnp.pad(t_flat, ((0, pi * nbk), (0, pn)))
+    Bp, Ip, Np = B + pb, n_in + pi, n_out + pn
+    i_steps = Ip // bi
+
+    out = pl.pallas_call(
+        functools.partial(_kan_kernel, spec=spec, kb=kb, i_steps=i_steps),
+        grid=(Bp // bm, Np // bn, i_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bi), lambda b, n, i: (b, i)),
+            pl.BlockSpec((bi, bn), lambda b, n, i: (i, n)),
+            pl.BlockSpec((bi * nbk, bn), lambda b, n, i: (i, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda b, n, i: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wbp, tp)
+    return out[:B, :n_out]

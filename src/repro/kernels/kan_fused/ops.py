@@ -1,0 +1,78 @@
+"""Public entry for the fused KAN layer with impl dispatch.
+
+"jnp" is the XLA path used by CPU tests and the multi-pod dry-run: it keeps
+the same structural sparsity (local K+1 evaluation + static column
+compaction) expressed in jnp ops, so cost_analysis sees the real op mix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.splines import SplineSpec, bases_local, scatter_local, silu
+from repro.kernels.kan_fused.kan_fused import kan_fused_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flatten_t(t: jax.Array, kb: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """(n_in, n_bases, n_out) -> (n_in*nbk, n_out), rows feature-major.
+
+    ``kb`` selects the kept basis indices (stage-2 compaction at build time).
+    """
+    if kb is not None:
+        t = jnp.take(t, jnp.asarray(kb, jnp.int32), axis=1)
+    n_in, nbk, n_out = t.shape
+    return t.reshape(n_in * nbk, n_out)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "kb", "impl"))
+def kan_linear(
+    x: jax.Array,            # (..., n_in)
+    w_b: jax.Array,          # (n_in, n_out)
+    t_flat: jax.Array,       # (n_in * nbk, n_out)
+    spec: SplineSpec,
+    kb: Optional[Tuple[int, ...]] = None,
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """phi(x) per Eq. 3 with two-stage sparsity; batch dims preserved."""
+    lead = x.shape[:-1]
+    n_in = x.shape[-1]
+    xf = x.reshape(-1, n_in)
+    kb = tuple(range(spec.n_bases)) if kb is None else tuple(kb)
+    nbk = len(kb)
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl in ("pallas", "pallas_interpret"):
+        y = kan_fused_pallas(
+            xf, w_b, t_flat, spec, kb, interpret=(impl == "pallas_interpret")
+        )
+    elif impl == "jnp":
+        # Stage 1: only K+1 basis values are computed (VPU-op saving)...
+        vals, cell = bases_local(spec.clip(xf), spec)      # (B, n_in, K+1)
+        if nbk == spec.n_bases:
+            # ...then scattered to dense layout for one big contraction.
+            act = scatter_local(vals, cell, spec)           # (B,n_in,G+K)
+        else:
+            # Stage 2: scatter directly into the kept-basis columns.
+            kbv = jnp.asarray(kb, jnp.int32)
+            delta = kbv[None, None, :] - cell[..., None]    # (B,n_in,nbk)
+            act = jnp.zeros(delta.shape, x.dtype)
+            for j in range(spec.n_active):
+                act = act + jnp.where(delta == j, vals[..., j:j + 1], 0.0)
+        y = jnp.dot(silu(xf), w_b, preferred_element_type=jnp.float32)
+        y = y + jnp.dot(
+            act.reshape(-1, n_in * nbk), t_flat,
+            preferred_element_type=jnp.float32,
+        )
+        y = y.astype(x.dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, w_b.shape[-1])

@@ -1,0 +1,30 @@
+"""Oracle for the fused KAN layer: paper Eq. 3, dense, pure jnp."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import PatternMask
+from repro.core.splines import SplineSpec, bases_dense, silu
+
+
+def kan_layer_ref(
+    x: jax.Array,            # (B, n_in)
+    w_b: jax.Array,          # (n_in, n_out)
+    t: jax.Array,            # (n_in, n_bases, n_out)  [t_i = w_s * c_i]
+    spec: SplineSpec,
+    basis_mask: Optional[PatternMask] = None,   # over the n_bases dim
+) -> jax.Array:
+    """phi(x) = silu(x) @ w_b + sum_i t_i B_i(x)  (Eq. 3), fp32 math.
+
+    ``basis_mask`` zeroes masked basis functions (TSE stage-2 semantics).
+    """
+    xf = x.astype(jnp.float32)
+    b = bases_dense(spec.clip(xf), spec)              # (B, n_in, n_bases)
+    if basis_mask is not None:
+        b = b * jnp.asarray(basis_mask.keep.astype("float32"))
+    y = jnp.dot(silu(xf), w_b.astype(jnp.float32))
+    y = y + jnp.einsum("bpi,pio->bo", b, t.astype(jnp.float32))
+    return y.astype(x.dtype)

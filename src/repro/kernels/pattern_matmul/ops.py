@@ -1,0 +1,57 @@
+"""Public entry: pattern-sparse linear layer (static m-of-4 compaction).
+
+``pattern_linear`` takes the ORIGINAL weight and a PatternMask over its input
+dimension; compaction happens here (static, at trace time) so both the Pallas
+path and the XLA fallback contract over the shrunken dimension -- the FLOP /
+byte saving is visible to cost_analysis either way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import PatternMask
+from repro.kernels.pattern_matmul.pattern_matmul import matmul_compact_pallas
+from repro.kernels.pattern_matmul.ref import ACTS
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pattern_linear(
+    x: jax.Array,
+    w: jax.Array,
+    mask: Optional[PatternMask] = None,
+    bias: Optional[jax.Array] = None,
+    *,
+    act: Optional[str] = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """y = act(x[..., keep] @ w[keep, :] + bias).
+
+    x: (..., K); w: (K, N).  With mask=None this is a plain fused linear.
+    """
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    if mask is not None:
+        idx = jnp.asarray(mask.indices())
+        xf = jnp.take(xf, idx, axis=1)       # static gather (slices/copies)
+        w = jnp.take(w, idx, axis=0)         # folded at compile time
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas":
+        y = matmul_compact_pallas(xf, w, bias, act=act)
+    elif impl == "pallas_interpret":
+        y = matmul_compact_pallas(xf, w, bias, act=act, interpret=True)
+    elif impl == "jnp":
+        y = jnp.dot(xf, w, preferred_element_type=jnp.float32)
+        if bias is not None:
+            y = y + bias
+        y = ACTS[act](y).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, w.shape[-1])

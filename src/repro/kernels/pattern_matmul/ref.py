@@ -1,0 +1,35 @@
+"""Oracle for pattern_matmul: masked dense matmul with fused epilogue."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import PatternMask, apply_mask
+
+ACTS = {
+    None: lambda v: v,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def pattern_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    mask: Optional[PatternMask] = None,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+) -> jax.Array:
+    """y = act((x * mask) @ w + bias) computed densely (no compaction).
+
+    This is the semantics the compacted kernel must match: masked-out input
+    nodes contribute nothing, regardless of their value.
+    """
+    xm = apply_mask(x, mask) if mask is not None else x
+    y = jnp.dot(xm.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return ACTS[act](y).astype(x.dtype)

@@ -1,0 +1,48 @@
+"""Public entry point for B-spline basis evaluation.
+
+Dispatch: Pallas kernel on TPU, interpret-mode Pallas when explicitly
+requested (tests), pure-jnp densified path otherwise (CPU / dry-run -- XLA
+then sees the real op mix, which is what cost_analysis reads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.splines import SplineSpec, bases_local, scatter_local
+from repro.kernels.spline_basis.spline_basis import spline_basis_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"))
+def spline_basis(x: jax.Array, spec: SplineSpec, *, impl: str = "auto") -> jax.Array:
+    """Dense (..., G+K) basis values.
+
+    impl: "auto" (pallas on TPU else jnp) | "pallas" | "pallas_interpret"
+          | "jnp" (local eval + scatter) | "ref" handled by ref.py.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas":
+        out = spline_basis_pallas(flat, spec)
+    elif impl == "pallas_interpret":
+        out = spline_basis_pallas(flat, spec, interpret=True)
+    elif impl == "jnp":
+        vals, cell = bases_local(flat, spec)
+        out = scatter_local(vals, cell, spec)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out.reshape(*shape, spec.n_bases)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def spline_basis_local(x: jax.Array, spec: SplineSpec):
+    """Zero-free form: ((..., K+1) values, (...,) int32 cell offsets)."""
+    return bases_local(x, spec)

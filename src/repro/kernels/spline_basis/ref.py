@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the spline_basis kernel: dense Cox-de Boor."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.splines import SplineSpec, bases_dense
+
+
+def spline_basis_ref(x: jax.Array, spec: SplineSpec) -> jax.Array:
+    """All G+K basis values for a flat batch of inputs.
+
+    Args:
+      x: (n,) inputs (any float dtype).
+    Returns:
+      (n, G+K) dense basis values.
+    """
+    return bases_dense(x, spec)

@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run (and only the dry-run) builds the production mesh out of 512
+# placeholder host devices; smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (arch x input-shape x mesh) cell: lower + compile the real
+train/serve step with full sharding annotations, prove it fits
+(memory_analysis), and harvest the roofline inputs (cost_analysis FLOPs /
+bytes + collective bytes parsed from the compiled HLO).
+
+Scan correction: layers are compiled as ONE scanned body, which XLA's cost
+analysis counts once.  Each single-pod cell therefore also compiles 1-unit
+and 2-unit calibration variants; per-unit cost = calib2 - calib1, and
+  total = full_raw + (n_units - 1) * per_unit
+(benchmarks/roofline.py applies this).  Collectives get the same treatment.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+Outputs: experiments/dryrun/<arch>__<shape>__<mesh>.json
+
+(No ``from __future__ import annotations`` here: the XLA_FLAGS lines above
+must stay the first statements in the file.)
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeSpec
+from repro.configs.registry import ARCHS, get_config, runnable_cells
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import StepOptions, lower_cell
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches operand refs like  bf16[16,512]{1,0} %name  inside op parens
+_OPERAND_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(ls: str) -> int:
+    m = _GROUPS_RE.search(ls)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(ls)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum OPERAND bytes of every collective op in the (post-partitioning,
+    per-device) module, split entry vs while-body for scan correction.
+
+    Modern HLO printing omits operand types, so operand bytes are derived
+    from the RESULT shape(s) + the replica-group size:
+      all-reduce / all-to-all / collective-permute : operand == result
+      all-gather    : operand = result / group_size
+      reduce-scatter: operand = result * group_size
+    Async ``-start`` forms carry an (operand, result) tuple result: halved.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{", ls)
+        if m and not ls.startswith("ROOT"):
+            in_entry = bool(m.group(1))
+            continue
+        for cname in _COLLECTIVES:
+            mm = re.search(rf"=\s*(.*?)\s{re.escape(cname)}(-start)?\(", ls)
+            if not mm:
+                continue
+            result_part, is_start = mm.group(1), bool(mm.group(2))
+            byts = sum(_shape_bytes(dt, dims)
+                       for dt, dims in _OPERAND_RE.findall(result_part))
+            if is_start:
+                byts /= 2.0            # (operand, result) tuple
+            gs = _group_size(ls)
+            if cname == "all-gather":
+                byts /= gs
+            elif cname == "reduce-scatter":
+                byts *= gs
+            scope = "entry" if in_entry else "body"
+            d = out.setdefault(cname, {"entry": 0.0, "body": 0.0,
+                                       "count": 0})
+            d[scope] += byts
+            d["count"] += 1
+            break
+    return out
+
+
+def _mem_dict(ma) -> Dict[str, float]:
+    fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes")
+    return {f: float(getattr(ma, f, 0) or 0) for f in fields}
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool,
+                 calibrate: bool = True,
+                 opts: StepOptions = StepOptions()) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(mesh.devices.size),
+        "kind": shape.kind,
+        "pattern": list(cfg.pattern),
+        "ok": False,
+    }
+
+    def one(cfg_variant, tag: str) -> Dict:
+        t0 = time.time()
+        lowered = lower_cell(cfg_variant, mesh, shape, opts)
+        compiled = lowered.compile()
+        ca = dict(compiled.cost_analysis() or {})
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        return {
+            "tag": tag,
+            "compile_s": round(time.time() - t0, 1),
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+            "memory": _mem_dict(ma),
+            "collectives": coll,
+            "hlo_bytes": len(hlo),
+        }
+
+    u = len(cfg.pattern)
+    n_units = cfg.n_layers // u
+    rec["n_units"] = n_units
+    rec["n_extra"] = cfg.n_layers % u
+
+    rec["full"] = one(cfg, "full")
+    if calibrate and n_units > 2:
+        # calibration variants are UNROLLED (scan_layers=False): a scanned
+        # while body is cost-counted once regardless of trip count, so only
+        # an unrolled 2-layer minus 1-layer diff yields true per-layer cost
+        calib = {"n_layers": u, "n_enc_layers": 1 if cfg.enc_dec else 0,
+                 "scan_layers": False}
+        calib2 = {"n_layers": 2 * u,
+                  "n_enc_layers": 2 if cfg.enc_dec else 0,
+                  "scan_layers": False}
+        rec["calib1"] = one(dataclasses.replace(cfg, **calib), "calib1")
+        rec["calib2"] = one(dataclasses.replace(cfg, **calib2), "calib2")
+    rec["ok"] = True
+    return rec
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh_tag: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_tag}.json")
+
+
+def recalib_cell(arch: str, shape_name: str, out_dir: str) -> None:
+    """Replace calib1/calib2 in an existing single-mesh JSON with unrolled
+    variants (used to patch artifacts produced before the unroll fix)."""
+    import dataclasses as dc
+    path = cell_path(out_dir, arch, shape_name, "single")
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        rec = json.load(f)
+    if not rec.get("ok"):
+        return
+    cfg = get_config(arch)
+    u = len(cfg.pattern)
+    if cfg.n_layers // u <= 2:
+        return
+    mesh = make_production_mesh(multi_pod=False)
+    shape = SHAPES[shape_name]
+
+    def one(cfg_variant, tag):
+        t0 = time.time()
+        compiled = lower_cell(cfg_variant, mesh, shape).compile()
+        ca = dict(compiled.cost_analysis() or {})
+        hlo = compiled.as_text()
+        return {
+            "tag": tag, "compile_s": round(time.time() - t0, 1),
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+            "memory": _mem_dict(compiled.memory_analysis()),
+            "collectives": parse_collectives(hlo),
+            "hlo_bytes": len(hlo),
+        }
+
+    rec["calib1"] = one(dataclasses.replace(
+        cfg, n_layers=u, n_enc_layers=1 if cfg.enc_dec else 0,
+        scan_layers=False), "calib1")
+    rec["calib2"] = one(dataclasses.replace(
+        cfg, n_layers=2 * u, n_enc_layers=2 if cfg.enc_dec else 0,
+        scan_layers=False), "calib2")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[RECAL] {arch:25s} {shape_name:12s} "
+          f"per-unit flops={rec['calib2']['flops']-rec['calib1']['flops']:.3e}",
+          flush=True)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             skip_existing: bool = False) -> Optional[Dict]:
+    mesh_tag = "multi" if multi_pod else "single"
+    path = cell_path(out_dir, arch, shape_name, mesh_tag)
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        print(f"[SKIP] {arch:25s} {shape_name:12s} {rec.get('mesh','?'):8s} "
+              f"ok={rec.get('ok')}", flush=True)
+        return rec
+    t0 = time.time()
+    try:
+        # calibration compiles only on the single-pod mesh (the roofline
+        # table is single-pod; multi-pod proves the pod axis shards).
+        rec = analyze_cell(arch, shape_name, multi_pod,
+                           calibrate=not multi_pod)
+    except Exception as e:  # a failure here is a bug in our sharding
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    rec["wall_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK " if rec.get("ok") else "FAIL"
+    mem = rec.get("full", {}).get("memory", {})
+    print(f"[{status}] {arch:26s} {shape_name:12s} {rec['mesh']:8s} "
+          f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"wall={rec['wall_s']}s", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(OUT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--recalib", action="store_true",
+                    help="patch existing single-mesh JSONs with unrolled "
+                         "calibration compiles")
+    args = ap.parse_args()
+
+    if args.recalib:
+        cells = ([(args.arch, args.shape)] if args.arch
+                 else runnable_cells())
+        for arch, shape in cells:
+            recalib_cell(arch, shape, args.out)
+        raise SystemExit(0)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = runnable_cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out,
+                           skip_existing=args.skip_existing)
+            if not rec.get("ok"):
+                n_fail += 1
+    print(f"done: {len(cells) * len(meshes)} cells, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

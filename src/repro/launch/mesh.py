@@ -1,0 +1,39 @@
+"""Production mesh construction (DESIGN.md Sec. 6).
+
+Axes: ("pod", "data", "model") -- pod = cross-DCN data parallelism,
+data = intra-pod ICI data parallelism, model = ICI tensor parallelism.
+A FUNCTION (not a module constant) so importing never touches jax device
+state; the dry-run sets XLA_FLAGS before calling this.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_host_mesh():
+    """1-device mesh with the same axis names (tests / examples on CPU)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes that carry batch parallelism on this mesh."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def n_chips(mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,51 @@
+"""Serving launcher: load (or init) a model and run the batched server.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --scale smoke --requests 6 --new-tokens 12
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.checkpoint import latest_step, restore_checkpoint
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.runtime.server import Server
+
+    cfg = get_config(args.arch)
+    if args.scale == "smoke":
+        cfg = cfg.reduce()
+    params = T.init_params(jax.random.key(0), cfg)
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state = {"params": params}
+        restored, step, _ = restore_checkpoint(args.ckpt_dir, state)
+        params = restored["params"]
+        print(f"restored params from step {step}")
+
+    srv = Server(cfg, params, n_slots=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        n = int(rng.integers(3, 16))
+        srv.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
+                   max_new_tokens=args.new_tokens)
+    out = srv.run_until_done()
+    for rid, toks in sorted(out.items()):
+        print(f"req {rid}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

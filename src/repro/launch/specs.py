@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` mirrors exactly what the data pipeline /
+serving frontend would feed:
+  train   : {"tokens": (B, S+1) i32}  (+frames/patches stubs)
+  prefill : {"tokens": (B, S) i32}    (+frames/patches stubs)
+  decode  : {"token": (B, 1) i32, "caches": <full cache pytree shapes>}
+``state_specs`` gives the abstract TrainState (params + AdamW moments).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.optim import adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+def frontend_specs(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    out = {}
+    if cfg.frontend == "vision":
+        out["patches"] = SDS((batch, cfg.n_frontend_tokens, cfg.d_model),
+                             cfg.param_dtype)
+    if cfg.frontend == "audio":
+        out["frames"] = SDS((batch, cfg.n_frontend_tokens, cfg.d_model),
+                            cfg.param_dtype)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": SDS((B, S + 1), jnp.int32),
+                **frontend_specs(cfg, B)}
+    if shape.kind == "prefill":
+        return {"tokens": SDS((B, S), jnp.int32), **frontend_specs(cfg, B)}
+    if shape.kind == "decode":
+        caches = jax.eval_shape(
+            functools.partial(T.init_caches, cfg, B, S + cfg.decode_margin))
+        return {"token": SDS((B, 1), jnp.int32), "caches": caches}
+    raise ValueError(shape.kind)
+
+
+def param_specs(cfg: ArchConfig):
+    return T.param_shapes(cfg)
+
+
+def state_specs(cfg: ArchConfig):
+    params = T.param_shapes(cfg)
+    opt = jax.eval_shape(adamw_init, params)
+    return {"params": params, "opt": opt,
+            "step": SDS((), jnp.int32)}

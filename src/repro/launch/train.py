@@ -1,0 +1,75 @@
+"""Production training launcher.
+
+On a real cluster every host runs this under its TPU runtime and
+jax.distributed wires the mesh; in this container it runs the same code on
+the host mesh.  ``--dry-run`` lowers/compiles for the production mesh
+instead of executing (see dryrun.py for the full sweep driver).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 100 --seq 128 --batch 8 --scale smoke
+  PYTHONPATH=src python -m repro.launch.train --arch granite-20b \
+      --shape train_4k --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ffn", default=None)
+    ap.add_argument("--pattern", type=float, default=0.0)
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # re-exec through dryrun so XLA_FLAGS is set before jax imports
+        os.execvp("python", ["python", "-m", "repro.launch.dryrun",
+                             "--arch", args.arch, "--shape", args.shape,
+                             "--mesh", "both"])
+
+    import dataclasses
+    from repro.configs.registry import get_config
+    from repro.data.lm import LMDataConfig, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import StepOptions
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.scale == "smoke":
+        cfg = cfg.reduce()
+    over = {}
+    if args.ffn:
+        over["ffn_kind"] = args.ffn
+    if args.pattern:
+        over["pattern_rate"] = args.pattern
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    data = SyntheticLM(LMDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+    tcfg = TrainerConfig(
+        max_steps=args.steps,
+        ckpt_dir=args.ckpt_dir or tempfile.mkdtemp(prefix="train_"),
+        ckpt_every=max(10, args.steps // 5), log_every=10)
+    trainer = Trainer(cfg, tcfg, make_host_mesh(), data,
+                      StepOptions(lr=args.lr, total_steps=args.steps,
+                                  warmup=min(100, args.steps // 10)))
+    out = trainer.run_with_restarts()
+    print(f"final step {out['final_step']}, "
+          f"loss {out['metrics'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,377 @@
+"""GQA attention: training (chunked/flash-style), prefill, and cached decode.
+
+Memory discipline is what matters at the assigned shapes (prefill_32k is
+32768 tokens x 32 batch): the O(S^2) score matrix is never materialized for
+long sequences.  ``chunked_attention`` runs an online-softmax over KV blocks
+inside a scan over Q blocks -- the JAX-native flash attention pattern -- with
+masks (causal / sliding-window / prefix-LM) computed from block indices.
+Short sequences take the direct einsum path (cheaper to compile, same math).
+
+Decode attends one new token against a KV cache; the cache lives sequence-
+sharded over the model axis at scale (launch/sharding.py), GQA kv_heads
+(1..8) being too few to shard 16 ways.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, dense, dense_init, rmsnorm, \
+    rmsnorm_init, softcap
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: Optional[int] = None        # defaults to d_model // n_heads
+    qkv_bias: bool = False                # qwen-style
+    rope_base: float = 10000.0
+    window: Optional[int] = None          # sliding-window (recurrentgemma)
+    logit_softcap: Optional[float] = None
+    qk_norm: bool = False                 # qwen3-style per-head RMS on q,k
+    causal: bool = True                   # False for encoders
+    # int8 KV cache (beyond-paper): halves the decode-time HBM term, which
+    # dominates long-context decode.  Per-(token, head) symmetric scales.
+    kv_quant: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    hd = cfg.hd
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: AttnConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dense(params["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(params["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_base)
+    k = apply_rope(k, positions, cfg.rope_base)
+    return q, k, v
+
+
+def _mask_block(q_pos, k_pos, cfg: AttnConfig,
+                prefix_len: Optional[jax.Array]) -> jax.Array:
+    """(Sq, Sk) bool mask: True = attend."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if cfg.causal:
+        m = dk <= dq
+        if prefix_len is not None:      # prefix-LM: bidirectional prefix
+            m = m | (dk < prefix_len)
+    if cfg.window is not None:
+        m = m & (dq - dk < cfg.window)
+    return m
+
+
+def _direct_attention(q, k, v, cfg: AttnConfig, q_pos, k_pos, prefix_len):
+    """Materialized-score path for short sequences."""
+    B, Sq, H, hd = q.shape
+    G = cfg.q_groups
+    qf = q.astype(jnp.float32) / np.sqrt(hd)
+    qf = qf.reshape(B, Sq, cfg.n_kv_heads, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    s = softcap(s, cfg.logit_softcap)
+    mask = _mask_block(q_pos, k_pos, cfg, prefix_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, cfg: AttnConfig, q_pos, k_pos, prefix_len,
+                       q_block: int, k_block: int):
+    """Flash-style: scan over Q blocks; inner scan over KV blocks with
+    online softmax (running max m, denominator l, accumulator acc)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    G = cfg.q_groups
+    KV = cfg.n_kv_heads
+    assert Sq % q_block == 0 and Sk % k_block == 0, (Sq, q_block, Sk, k_block)
+    nq, nk = Sq // q_block, Sk // k_block
+
+    # blocks stay in the compute dtype (bf16); the einsum accumulates f32
+    # via preferred_element_type, so only per-block scores are ever f32
+    qf = (q / np.sqrt(hd).astype(q.dtype)).reshape(
+        B, nq, q_block, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, KV, G, qb, hd)
+    kf = k.reshape(B, nk, k_block, KV, hd).transpose(
+        1, 0, 3, 2, 4)                       # (nk, B, KV, kb, hd)
+    vf = v.reshape(B, nk, k_block, KV, hd).transpose(
+        1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, q_block)
+    kp = k_pos.reshape(nk, k_block)
+
+    def q_step(_, qi):
+        qblk, qpos = qi                       # (B,KV,G,qb,hd), (qb,)
+
+        # remat: without it, autodiff saves every block's (qb, kb) score
+        # matrix -- O(S^2) residuals that defeat the whole chunking.  With
+        # checkpoint the backward recomputes one block at a time.
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bkgqh,bksh->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, cfg.logit_softcap)
+            mask = _mask_block(qpos, kpos, cfg, prefix_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksh->bkgqh", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kf, vf, kp))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # emit in the compute dtype: the stacked per-q-block outputs are one
+        # of the largest live buffers at 32k sequence lengths
+        return None, out.astype(q.dtype)
+
+    _, o = jax.lax.scan(jax.checkpoint(q_step), None, (qf, qp))
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return o.astype(q.dtype)
+
+
+def _pick_block(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (block sizes must tile S)."""
+    for b in range(min(target, s), 0, -1):
+        if s % b == 0:
+            return b
+    return 1
+
+
+def attention(
+    params: Dict,
+    x: jax.Array,                     # (B, S, d)
+    cfg: AttnConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    prefix_len: Optional[jax.Array] = None,
+    chunk_threshold: int = 2048,
+    q_block: int = 512,
+    k_block: int = 512,
+) -> jax.Array:
+    """Self-attention over a full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    pos1d = positions[0] if positions.ndim == 2 else positions
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if S <= chunk_threshold:
+        o = _direct_attention(q, k, v, cfg, pos1d, pos1d, prefix_len)
+    else:
+        # VLM prefixes etc. make S non-power-of-two: pick dividing blocks
+        o = _chunked_attention(q, k, v, cfg, pos1d, pos1d, prefix_len,
+                               _pick_block(S, q_block),
+                               _pick_block(S, k_block))
+    return dense(params["wo"], o.reshape(B, S, -1))
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+def _kv_quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(..., hd) -> int8 values + per-(..., ) f16 scale over the hd axis."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (amax / 127.0 + 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.float16)
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def init_cache(batch: int, max_len: int, cfg: AttnConfig,
+               dtype=jnp.float32) -> Dict:
+    """``len`` is PER ROW: the serving layer batches requests at different
+    positions in one decode step (slot-based continuous batching)."""
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float16),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float16),
+                "len": jnp.zeros((batch,), jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill_cache(params, x, cfg: AttnConfig, max_len: int,
+                  dtype=None) -> Tuple[jax.Array, Dict]:
+    """Run full attention AND return the populated cache.
+
+    With a sliding window (max_len == window < S), only the trailing
+    ``window`` tokens enter the ring, rotated so token j sits at slot
+    j % window -- the invariant decode_step relies on.
+    """
+    B, S, _ = x.shape
+    dtype = dtype or x.dtype
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    cache = init_cache(B, max_len, cfg, dtype)
+    k_in, v_in = k, v                     # cache payload (attention uses
+    if S > max_len:                       # the FULL k, v below)
+        # ring: keep the last window only, rotated so token j -> slot j % W
+        assert cfg.window is not None and max_len == min(cfg.window, max_len)
+        shift = (S - max_len) % max_len
+        k_in = jnp.roll(k[:, -max_len:], shift, axis=1)
+        v_in = jnp.roll(v[:, -max_len:], shift, axis=1)
+    if cfg.kv_quant:
+        kq, ks = _kv_quant(k_in)
+        vq, vs = _kv_quant(v_in)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, 0, 0, 0))
+        cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, 0, 0))
+        cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, 0, 0))
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_in.astype(dtype), (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_in.astype(dtype), (0, 0, 0, 0))
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+    pos1d = positions[0]
+    if S <= 2048:
+        o = _direct_attention(q, k, v, cfg, pos1d, pos1d, None)
+    else:
+        o = _chunked_attention(q, k, v, cfg, pos1d, pos1d, None,
+                               _pick_block(S, 512), _pick_block(S, 512))
+    return dense(params["wo"], o.reshape(B, S, -1)), cache
+
+
+def decode_step(params, x1, cfg: AttnConfig, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """One-token decode: x1 (B, 1, d) against the cache (functional update).
+
+    Each batch row sits at its own position ``len[b]`` (slot-based serving).
+    With a sliding window the cache is a ring buffer of size window (the
+    RecurrentGemma local-attention layout); otherwise it is append-only.
+    """
+    B = x1.shape[0]
+    t = cache["len"]                              # (B,)
+    positions = t[:, None]
+    q, k, v = _project_qkv(params, x1, cfg, positions)
+
+    max_len = cache["k"].shape[1]
+    slot = (t % max_len) if cfg.window is not None else jnp.minimum(
+        t, max_len - 1)
+    idx = jnp.arange(max_len)
+    # per-row cache write -> scatter (NOT a full-cache select: decode is
+    # memory-bound and the cache write must stay O(B), not O(B*S))
+    write = jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice(c, n, (s, 0, 0)))
+    new_scales = {}
+    if cfg.kv_quant:
+        kq, ksc = _kv_quant(k)
+        vq, vsc = _kv_quant(v)
+        kc = write(cache["k"], kq, slot)
+        vc = write(cache["v"], vq, slot)
+        write2 = jax.vmap(
+            lambda c, n, s: jax.lax.dynamic_update_slice(c, n, (s, 0)))
+        new_scales["k_scale"] = write2(cache["k_scale"], ksc, slot)
+        new_scales["v_scale"] = write2(cache["v_scale"], vsc, slot)
+    else:
+        kc = write(cache["k"], k.astype(cache["k"].dtype), slot)
+        vc = write(cache["v"], v.astype(cache["v"].dtype), slot)
+
+    hd = cfg.hd
+    qf = (q.astype(jnp.float32) / np.sqrt(hd)).reshape(
+        B, cfg.n_kv_heads, cfg.q_groups, hd)
+    # int8 path: scales factor out of the hd contraction, so the cache is
+    # read at 1 byte/elem and converted in-register (never materialized)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, kc.astype(jnp.float32))
+    if cfg.kv_quant:
+        s = s * new_scales["k_scale"].astype(jnp.float32).transpose(
+            0, 2, 1)[:, :, None, :]
+    s = softcap(s, cfg.logit_softcap)
+    # valid = slots holding tokens visible to this row's position
+    if cfg.window is not None:
+        # ring buffer: every slot written within the last W tokens is live
+        written = jnp.minimum(t + 1, max_len)     # (B,)
+        order = (slot[:, None] - idx[None, :]) % max_len   # 0 = newest
+        valid = order < written[:, None]
+    else:
+        valid = idx[None, :] <= t[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if cfg.kv_quant:
+        p = p * new_scales["v_scale"].astype(jnp.float32).transpose(
+            0, 2, 1)[:, :, None, :]
+    o = jnp.einsum("bkgs,bskh->bkgh", p, vc.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.n_heads * hd).astype(x1.dtype)
+    out = dense(params["wo"], o)
+    return out, {"k": kc, "v": vc, "len": t + 1, **new_scales}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> Dict:
+    return attn_init(key, dataclasses.replace(cfg, qk_norm=False), dtype)
+
+
+def cross_attention(params, x, memory, cfg: AttnConfig) -> jax.Array:
+    """x: (B, Sq, d) queries; memory: (B, Sk, d) encoder states (no rope)."""
+    B, Sq, _ = x.shape
+    Sk = memory.shape[1]
+    hd = cfg.hd
+    q = dense(params["wq"], x).reshape(B, Sq, cfg.n_heads, hd)
+    k = dense(params["wk"], memory).reshape(B, Sk, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], memory).reshape(B, Sk, cfg.n_kv_heads, hd)
+    qf = (q.astype(jnp.float32) / np.sqrt(hd)).reshape(
+        B, Sq, cfg.n_kv_heads, cfg.q_groups, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    o = o.reshape(B, Sq, cfg.n_heads * hd).astype(x.dtype)
+    return dense(params["wo"], o)

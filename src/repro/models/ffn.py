@@ -1,0 +1,135 @@
+"""FFN family: dense MLP / SwiGLU / GeGLU / **KAN-FFN** / pattern-sparse.
+
+This is where the paper's contribution becomes a first-class framework
+feature: every transformer block selects its feed-forward through
+``FFNConfig.kind``, and ``kind="kan"`` swaps the MLP for a stack of two KAN
+layers (Eq. 3) with the full two-stage sparsity pipeline -- the "KANs are a
+drop-in replacement for MLPs" claim made literal at LM scale.  ``kind`` other
+than kan may still carry an m-of-4 pattern mask on the hidden dimension
+(stage-2 sparsity for MLPs, paper Fig. 3b / Table II).
+
+KAN hidden width defaults to d_ff // (n_bases + 1): each KAN edge carries
+(G + K + 1) parameters, so this keeps KAN-FFN parameter-matched with the MLP
+it replaces (the same budget logic behind the paper's Table I models).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kan import KANConfig, kan_apply, kan_init
+from repro.core.sparsity import PatternMask, sparsity_to_pattern, tiled_mask
+from repro.core.splines import SplineSpec
+from repro.kernels.pattern_matmul.ops import pattern_linear
+from repro.models.layers import ACT_FNS, dense, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"            # mlp | swiglu | geglu | kan
+    act: str = "gelu"               # for kind == "mlp"
+    bias: bool = False
+    # stage-2 pattern sparsity over the hidden dim (MLP) / bases (KAN)
+    pattern_rate: float = 0.0
+    # KAN-FFN options
+    kan_grid: int = 4
+    kan_order: int = 3
+    kan_hidden: Optional[int] = None    # default: param-matched
+    kan_impl: str = "auto"
+
+    @property
+    def hidden_mask(self) -> Optional[PatternMask]:
+        if self.pattern_rate <= 0.0 or self.kind == "kan":
+            return None
+        return tiled_mask(self.d_ff, sparsity_to_pattern(self.pattern_rate))
+
+    def kan_cfgs(self) -> Tuple[KANConfig, KANConfig]:
+        spec = SplineSpec(self.kan_grid, self.kan_order)
+        h = self.kan_hidden or max(8, self.d_ff // (spec.n_bases + 1))
+        pat = (sparsity_to_pattern(self.pattern_rate)
+               if self.pattern_rate > 0 else None)
+        up = KANConfig(self.d_model, h, spec, pattern=pat, impl=self.kan_impl)
+        down = KANConfig(h, self.d_model, spec, pattern=pat,
+                         impl=self.kan_impl)
+        return up, down
+
+
+def ffn_init(key, cfg: FFNConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    if cfg.kind == "mlp":
+        return {
+            "up": dense_init(ks[0], cfg.d_model, cfg.d_ff, bias=cfg.bias,
+                             dtype=dtype),
+            "down": dense_init(ks[1], cfg.d_ff, cfg.d_model, bias=cfg.bias,
+                               dtype=dtype),
+        }
+    if cfg.kind in ("swiglu", "geglu"):
+        return {
+            "gate": dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype=dtype),
+            "up": dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype),
+            "down": dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype=dtype),
+        }
+    if cfg.kind == "kan":
+        up_cfg, down_cfg = cfg.kan_cfgs()
+        up = kan_init(ks[0], up_cfg, dtype)
+        down = kan_init(ks[1], down_cfg, dtype)
+        return {"kan_up": up, "kan_down": down}
+    raise ValueError(f"unknown ffn kind {cfg.kind!r}")
+
+
+def _compact(kernel: jax.Array, mask: PatternMask, axis: int) -> jax.Array:
+    """Static m-of-4 weight compaction.  The mask is a compile-time
+    constant, so on the weight (not the activation!) the gather is
+    O(params) per step -- negligible against the activation-sized matmul it
+    shrinks.  (Gathering activations instead costs MORE than the contraction
+    saves: measured in EXPERIMENTS.md §Perf HC3-A.)  At deployment the
+    weights would be pre-compacted offline (core/sparsity.compact_rows)."""
+    import jax.numpy as _jnp
+    return _jnp.take(kernel, _jnp.asarray(mask.indices()), axis=axis)
+
+
+def ffn_apply(params: Dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:
+    mask = cfg.hidden_mask
+    if cfg.kind == "mlp":
+        if mask is not None:
+            # stage-2 as pure shape reduction: up emits ONLY the kept
+            # hidden columns; down consumes only the kept rows
+            up_k = _compact(params["up"]["kernel"], mask, 1)
+            down_k = _compact(params["down"]["kernel"], mask, 0)
+            h = jnp.dot(x, up_k, preferred_element_type=jnp.float32)
+            if "bias" in params["up"]:
+                h = h + _compact(params["up"]["bias"][None], mask, 1)[0]
+            h = ACT_FNS[cfg.act](h).astype(x.dtype)
+            y = jnp.dot(h, down_k, preferred_element_type=jnp.float32)
+            if "bias" in params["down"]:
+                y = y + params["down"]["bias"]
+            return y.astype(x.dtype)
+        h = dense(params["up"], x)
+        h = ACT_FNS[cfg.act](h.astype(jnp.float32)).astype(x.dtype)
+        return dense(params["down"], h)
+    if cfg.kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.kind == "swiglu" else ACT_FNS["gelu"]
+        if mask is not None:
+            gate_k = _compact(params["gate"]["kernel"], mask, 1)
+            up_k = _compact(params["up"]["kernel"], mask, 1)
+            down_k = _compact(params["down"]["kernel"], mask, 0)
+            g = act(jnp.dot(x, gate_k,
+                            preferred_element_type=jnp.float32))
+            h = (g * jnp.dot(x, up_k,
+                             preferred_element_type=jnp.float32)).astype(
+                x.dtype)
+            return jnp.dot(h, down_k,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        g = act(dense(params["gate"], x).astype(jnp.float32)).astype(x.dtype)
+        h = g * dense(params["up"], x)
+        return dense(params["down"], h)
+    if cfg.kind == "kan":
+        up_cfg, down_cfg = cfg.kan_cfgs()
+        h = kan_apply(params["kan_up"], x, up_cfg)
+        return kan_apply(params["kan_down"], h, down_cfg)
+    raise ValueError(cfg.kind)

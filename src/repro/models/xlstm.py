@@ -1,0 +1,309 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+xlstm-125m has no FFN (d_ff=0): the blocks themselves carry the projections.
+Blocks alternate mLSTM/sLSTM 1:1 (the assignment fixes only "sLSTM + mLSTM
+blocks"; the ratio choice is documented in DESIGN.md).
+
+* mLSTM trains in the CHUNKWISE-PARALLEL form: the sequence is processed in
+  fixed chunks unrolled in Python (so the HLO -- and hence cost_analysis and
+  the roofline -- sees every FLOP, unlike a lax.scan body).  Within a chunk
+  the stabilized quadratic form is used (log-space gates, running max
+  stabilizer m); across chunks the (C, n, m) state is carried exactly.  The
+  recurrence is exponential-gated: C_t = f_t C_{t-1} + i_t v_t k_t^T,
+  h_t = C_t q_t / max(|n_t q_t|, exp(-m_t)).
+* sLSTM is inherently sequential (exponential gating with a normalizer and
+  per-head recurrent matrices) -> lax.scan over time.  Its recurrent-matmul
+  FLOPs sit inside the while body and are under-counted by cost_analysis;
+  benchmarks/roofline.py adds them back analytically (scan_flops hook).
+
+Decode (long_500k) is O(1) per token: both cells update constant-size state,
+which is why xlstm runs the 500k-token shape that full-attention archs skip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+LOG_EPS = -30.0
+# mLSTM chunk loops longer than this run as lax.scan (compile-time bound);
+# benchmarks/roofline.py restores the hidden FLOPs analytically above it.
+UNROLL_MAX_CHUNKS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0       # mLSTM up-projection
+    conv_kernel: int = 4
+    chunk: int = 128               # chunkwise-parallel chunk length
+    slstm_proj_factor: float = 4.0 / 3.0
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_inner % self.n_heads == 0
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "up": dense_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_kernel, di)) * 0.1
+                 ).astype(dtype),
+        "wq": dense_init(ks[2], di, di, dtype=dtype),
+        "wk": dense_init(ks[3], di, di, dtype=dtype),
+        "wv": dense_init(ks[4], di, di, dtype=dtype),
+        "wif": dense_init(ks[5], di, 2 * H, bias=True, dtype=dtype),
+        "out_norm": rmsnorm_init(di, dtype),
+        "down": dense_init(ks[6], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x (B,S,D), w (K,D).  Returns (y, new_state)
+    where state holds the trailing K-1 inputs (decode carry)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):, :]
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """Stabilized chunkwise mLSTM.  q,k,v: (B,H,L,hd); li,lf: (B,H,L) log
+    gates; state = (C (B,H,hd,hd), n (B,H,hd), m (B,H))."""
+    B, H, L, hd = q.shape
+    C_in, n_in, m_in = state
+    q = q.astype(jnp.float32) / np.sqrt(hd)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    F = jnp.cumsum(lf, axis=-1)                         # (B,H,L) inclusive
+    # intra-chunk exponents a[t,j] = F_t - F_j + li_j  (j <= t)
+    a = F[..., :, None] - F[..., None, :] + li[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    a = jnp.where(tri, a, LOG_EPS)
+    b = F + m_in[..., None]                             # inter exponent
+    m_loc = jnp.maximum(jnp.max(a, axis=-1), b)         # (B,H,L)
+    m_t = jnp.maximum(m_loc, -m_loc * 0 + LOG_EPS)
+
+    D = jnp.exp(a - m_t[..., None])                     # (B,H,L,L)
+    S = jnp.einsum("bhld,bhmd->bhlm", q, k) * D
+    h_intra = jnp.einsum("bhlm,bhmd->bhld", S, v)
+    inter_w = jnp.exp(b - m_t)                          # (B,H,L)
+    h_inter = jnp.einsum("bhld,bhde->bhle", q, C_in) * inter_w[..., None]
+    num = h_intra + h_inter
+
+    denom_vec = (jnp.einsum("bhlm,bhmd->bhld", D, k)
+                 + n_in[..., None, :] * inter_w[..., None])
+    denom = jnp.einsum("bhld,bhld->bhl", q, denom_vec)
+    denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))
+    h = num / denom[..., None]                          # (B,H,L,hd)
+
+    # end-of-chunk state
+    m_out = m_t[..., -1]
+    wF = jnp.exp(F[..., -1:] - F + li - m_out[..., None])     # (B,H,L)
+    C_out = (jnp.exp(F[..., -1] + m_in - m_out)[..., None, None] * C_in
+             + jnp.einsum("bhl,bhld,bhle->bhde", wF, k, v))
+    n_out = (jnp.exp(F[..., -1] + m_in - m_out)[..., None] * n_in
+             + jnp.einsum("bhl,bhld->bhd", wF, k))
+    return h, (C_out, n_out, m_out)
+
+
+def mlstm_apply(params: Dict, x: jax.Array, cfg: XLSTMConfig,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,d).  state carries (conv, C, n, m) for decode."""
+    B, S, d = x.shape
+    H, hd, di = cfg.n_heads, cfg.head_dim, cfg.d_inner
+    h = rmsnorm(params["norm"], x)
+    up = dense(params["up"], h)
+    z, gate = jnp.split(up, 2, axis=-1)                 # (B,S,di) each
+    conv_state = None if state is None else state.get("conv")
+    zc, conv_state = _causal_conv(z, params["conv"], conv_state)
+    zc = jax.nn.silu(zc.astype(jnp.float32)).astype(x.dtype)
+
+    def heads(t):
+        return t.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+
+    q = heads(dense(params["wq"], zc))
+    k = heads(dense(params["wk"], zc))
+    v = heads(dense(params["wv"], z))
+    gif = dense(params["wif"], zc).astype(jnp.float32)
+    li, lfr = jnp.split(gif.reshape(B, S, 2, H).transpose(0, 3, 1, 2), 2, -1)
+    li = li[..., 0]                                     # (B,H,S) log input
+    lf = jax.nn.log_sigmoid(lfr[..., 0])                # log forget
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), 0.0, jnp.float32)
+        st = (C0, n0, m0)
+    else:
+        st = (state["C"], state["n"], state["m"])
+
+    L = min(cfg.chunk, S)
+    n_chunks = -(-S // L)
+    if n_chunks <= UNROLL_MAX_CHUNKS:
+        # unrolled: every chunk's FLOPs visible to cost_analysis (train_4k)
+        outs = []
+        for s0 in range(0, S, L):
+            sl = slice(s0, s0 + L)
+            hh, st = _mlstm_chunk(q[:, :, sl], k[:, :, sl], v[:, :, sl],
+                                  li[:, :, sl], lf[:, :, sl], st)
+            outs.append(hh)
+        hs = jnp.concatenate(outs, axis=2)              # (B,H,S,hd)
+    else:
+        # long prefill: scanning 256+ chunks keeps HLO size bounded; the
+        # under-counted intra-chunk FLOPs are restored analytically by
+        # benchmarks/roofline.py (mlstm_chunk_flops)
+        assert S % L == 0, (S, L)
+
+        def chunked(t):
+            B_, H_, S_, d_ = t.shape
+            return t.reshape(B_, H_, S_ // L, L, d_).transpose(2, 0, 1, 3, 4)
+
+        qc, kc, vc = chunked(q), chunked(k), chunked(v)
+        lic = li.reshape(B, H, n_chunks, L).transpose(2, 0, 1, 3)
+        lfc = lf.reshape(B, H, n_chunks, L).transpose(2, 0, 1, 3)
+
+        def step(carry, xs):
+            qq, kk, vv, ii, ff = xs
+            hh, carry = _mlstm_chunk(qq, kk, vv, ii, ff, carry)
+            return carry, hh
+
+        st, hs_c = jax.lax.scan(step, st, (qc, kc, vc, lic, lfc))
+        hs = hs_c.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    hs = hs.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    hs = rmsnorm(params["out_norm"], hs)
+    hs = hs * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    y = x + dense(params["down"], hs)
+    new_state = {"conv": conv_state, "C": st[0], "n": st[1], "m": st[2]}
+    return y, new_state
+
+
+def mlstm_init_state(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict:
+    H, hd, di = cfg.n_heads, cfg.head_dim, cfg.d_inner
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di), dtype),
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 7)
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    r_init = jax.nn.initializers.orthogonal()
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "wx": dense_init(ks[0], d, 4 * d, bias=True, dtype=dtype),
+        # per-head recurrent block-diagonal matrices for the 4 gates
+        "r": (r_init(ks[1], (4, H, hd, hd)) * 0.6).astype(dtype),
+        "out_norm": rmsnorm_init(d, dtype),
+        "up": dense_init(ks[2], d, int(cfg.slstm_proj_factor * d) * 2,
+                         dtype=dtype),
+        "down": dense_init(ks[3], int(cfg.slstm_proj_factor * d), d,
+                           dtype=dtype),
+    }
+
+
+def _slstm_cell(carry, inp, r):
+    """One sLSTM step.  carry = (h, c, n, m) each (B,H,hd); inp = projected
+    gate pre-activations (B, 4, H, hd); r = (4,H,hd,hd) recurrent weights."""
+    h, c, n, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h, r.astype(jnp.float32))
+    zt, it, ft, ot = [inp[:, g].astype(jnp.float32) + rec[:, g]
+                      for g in range(4)]
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(lf + m - m_new)
+    c_new = f_ * c + i_ * jnp.tanh(zt)
+    n_new = f_ * n + i_
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_apply(params: Dict, x: jax.Array, cfg: XLSTMConfig,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xn = rmsnorm(params["norm"], x)
+    pre = dense(params["wx"], xn).reshape(B, S, 4, H, hd)
+
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros - 10.0)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    def step(cr, p_t):
+        return _slstm_cell(cr, p_t, params["r"])
+
+    carry, hs = jax.lax.scan(step, carry, pre.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    hs = rmsnorm(params["out_norm"], hs)
+    up = dense(params["up"], hs)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = x + dense(params["down"],
+                  a * jax.nn.gelu(b.astype(jnp.float32)).astype(x.dtype))
+    new_state = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    return y, new_state
+
+
+def slstm_init_state(batch: int, cfg: XLSTMConfig) -> Dict:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z - 10.0}
+
+
+def slstm_scan_flops(cfg: XLSTMConfig, batch: int, seq: int) -> float:
+    """Analytic FLOPs of the recurrent matmuls hidden inside the scan body
+    (added back by the roofline; see module docstring)."""
+    hd = cfg.d_model // cfg.n_heads
+    per_step = 2 * 4 * cfg.n_heads * hd * hd
+    return float(batch * seq * per_step)
+
+
+def mlstm_chunk_flops(cfg: XLSTMConfig, batch: int, seq: int) -> float:
+    """Analytic FLOPs of ONE mLSTM layer's chunkwise pass (used by the
+    roofline when the chunk loop runs as a scan, i.e. seq > 32*chunk)."""
+    L, H, hd = cfg.chunk, cfg.n_heads, cfg.head_dim
+    n_chunks = seq // L
+    per_chunk = (
+        2 * L * L * hd      # q k^T
+        + 2 * L * L * hd    # S v
+        + 2 * L * L * hd    # D k (denominator)
+        + 2 * L * hd * hd   # q C_in
+        + 2 * 2 * L * hd * hd  # C_out outer products + n_out
+    )
+    return float(batch * H * n_chunks * per_chunk)

@@ -1,0 +1,26 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    linear_schedule,
+)
+from repro.optim.compression import (
+    CompressionState,
+    compress_int8,
+    compressed_allreduce,
+    decompress_int8,
+    init_compression,
+)
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update", "global_norm",
+    "constant_schedule", "cosine_schedule", "linear_schedule",
+    "CompressionState", "compress_int8", "decompress_int8",
+    "compressed_allreduce", "init_compression",
+]

@@ -1,0 +1,112 @@
+"""AdamW from scratch as a pure pytree transformation.
+
+Built for sharded training: the update is elementwise, so moments inherit
+whatever PartitionSpec the parameters carry.  ZeRO-1 is realized in the
+launch layer by giving the moment pytrees an *additional* data-axis sharding
+(launch/sharding.py: zero1_spec), which GSPMD turns into reduce-scattered
+optimizer state; the math here is oblivious to it -- that separation is what
+keeps the optimizer testable on one CPU device.
+
+fp32 master moments regardless of parameter dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] = None  # schedule fn (step -> lr)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    # parameters whose path matches any of these substrings skip decay
+    no_decay_tokens: Tuple[str, ...] = ("bias", "norm", "scale", "ln_")
+
+
+@dataclasses.dataclass
+class OptState:
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+    def tree_flatten(self):
+        return (self.mu, self.nu, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    OptState, OptState.tree_flatten, OptState.tree_unflatten)
+
+
+def adamw_init(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _decay_mask(params: PyTree, tokens: Tuple[str, ...]) -> PyTree:
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    flags = []
+    for path, _ in paths:
+        name = jax.tree_util.keystr(path).lower()
+        flags.append(not any(t in name for t in tokens))
+    treedef = jax.tree.structure(params)
+    return jax.tree.unflatten(treedef, flags)
+
+
+def adamw_update(
+    grads: PyTree,
+    state: OptState,
+    params: PyTree,
+    cfg: AdamWConfig,
+) -> Tuple[PyTree, OptState, Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state.count + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr(count) if cfg.lr is not None else jnp.asarray(1e-3)
+
+    mu = jax.tree.map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g.astype(jnp.float32),
+        state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: cfg.b2 * v
+        + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+
+    decay = _decay_mask(params, cfg.no_decay_tokens)
+
+    def upd(p, m, v, dec):
+        step_ = lr * (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay:
+            step_ = step_ + lr * cfg.weight_decay * jnp.where(
+                dec, p.astype(jnp.float32), 0.0)
+        return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu, decay)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(mu=mu, nu=nu, count=count), metrics

@@ -1,0 +1,32 @@
+"""LR schedules as pure step -> lr functions (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def linear_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / warmup, 1.0) if warmup > 0 else 1.0
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        decay = 1.0 - (1.0 - final_frac) * frac
+        return lr * warm * decay
+    return f
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / warmup, 1.0) if warmup > 0 else 1.0
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * warm * (final_frac + (1 - final_frac) * cos)
+    return f

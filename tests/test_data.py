@@ -1,0 +1,65 @@
+"""Data pipeline: traffic surrogate statistics + windowing + metrics."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.data.traffic import (
+    TrafficConfig,
+    batches,
+    generate_series,
+    load_traffic,
+    mae,
+    make_windows,
+    mse,
+    rse,
+)
+
+
+def test_series_statistics():
+    cfg = TrafficConfig(n_sensors=16, n_hours=24 * 14)
+    s = generate_series(cfg)
+    assert s.shape == (24 * 14, 16)
+    assert s.min() >= 0.0 and s.max() <= 1.0          # occupancy range
+    # daily periodicity: autocorrelation at lag 24 beats lag 13
+    x = s[:, 0] - s[:, 0].mean()
+    ac = np.correlate(x, x, "full")[len(x) - 1:]
+    assert ac[24] > ac[13]
+
+
+def test_windows_shapes_and_alignment():
+    cfg = TrafficConfig(n_sensors=4, n_hours=24 * 20, stride=24)
+    s = generate_series(cfg)
+    x, y = make_windows(s, cfg)
+    assert x.shape[1] == 72 and y.shape[1] == 96
+    assert x.shape[0] == y.shape[0]
+    # window k of sensor 0: y continues where x ends
+    np.testing.assert_allclose(x[0], s[:72, 0])
+    np.testing.assert_allclose(y[0], s[72:168, 0])
+
+
+def test_split_ratios_and_no_leak():
+    data = load_traffic(TrafficConfig(n_sensors=8, n_hours=2048))
+    n = sum(data[k].shape[0] for k in ("train_x", "val_x", "test_x"))
+    assert abs(data["train_x"].shape[0] / n - 0.7) < 0.02
+    assert data["test_x"].shape[0] > 0
+
+
+def test_batches_cover_epoch():
+    x = np.arange(100)[:, None].astype(np.float32)
+    seen = [xb for xb, _ in batches(x, x, 32, seed=1)]
+    assert sum(b.shape[0] for b in seen) == 96  # 3 full batches
+
+
+def test_metrics_definitions():
+    t = np.array([[0.0, 1.0], [2.0, 3.0]])
+    p = t + 0.5
+    assert mse(p, t) == 0.25
+    assert mae(p, t) == 0.5
+    assert rse(t, t) == 0.0
+
+
+@hypothesis.given(seed=st.integers(0, 10))
+@hypothesis.settings(max_examples=5, deadline=None)
+def test_property_series_deterministic(seed):
+    cfg = TrafficConfig(n_sensors=3, n_hours=200, seed=seed)
+    np.testing.assert_array_equal(generate_series(cfg), generate_series(cfg))

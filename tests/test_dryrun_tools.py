@@ -1,0 +1,92 @@
+"""Dry-run tooling: HLO collective parser + shard_hint + roofline math."""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# importing repro.launch.dryrun sets XLA_FLAGS to force 512 host devices
+# (by design -- it must precede jax init in the dry-run process).  Force
+# jax to initialize on 1 device FIRST so the rest of the suite is immune.
+jax.devices()
+
+
+def test_parse_collectives_counts_operand_bytes():
+    from repro.launch.dryrun import parse_collectives
+    hlo = textwrap.dedent("""
+        ENTRY %main (p0: bf16[8,16]) -> bf16[8,16] {
+          %p0 = bf16[8,16]{1,0} parameter(0)
+          %ar = bf16[8,16]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[2,4]<=[8]
+          %ag = bf16[64,16]{1,0} all-gather(%ar), dimensions={0}, replica_groups=[1,8]<=[8]
+          ROOT %out = bf16[8,16]{1,0} copy(%ar)
+        }
+    """)
+    out = parse_collectives(hlo)
+    assert out["all-reduce"]["entry"] == 8 * 16 * 2
+    # all-gather operand = result / group size (8): 64*16*2/8
+    assert out["all-gather"]["entry"] == 8 * 16 * 2
+    assert out["all-reduce"]["count"] == 1
+
+
+def test_parse_collectives_body_vs_entry():
+    from repro.launch.dryrun import parse_collectives
+    hlo = textwrap.dedent("""
+        %body.1 (arg: (s32[], f32[4])) -> (s32[], f32[4]) {
+          %x = f32[4]{0} parameter(0)
+          %rs = f32[2]{0} reduce-scatter(%x), dimensions={0}, replica_groups=[4,2]<=[8]
+          ROOT %t = (s32[], f32[4]) tuple(...)
+        }
+        ENTRY %main (p0: f32[4]) -> f32[4] {
+          %w = (s32[], f32[4]) while(...), body=%body.1
+          ROOT %r = f32[4]{0} copy(...)
+        }
+    """)
+    out = parse_collectives(hlo)
+    # reduce-scatter operand = result * group size (2): 2*4*2
+    assert out["reduce-scatter"]["body"] == 16
+    assert out["reduce-scatter"]["entry"] == 0
+
+
+def test_roofline_scan_correction_math():
+    from benchmarks.roofline import _corrected
+    rec = {"full": {"flops": 100.0}, "calib1": {"flops": 30.0},
+           "calib2": {"flops": 50.0}, "n_units": 10}
+    # per-unit = 20; corrected = 100 + 9 * 20 = 280
+    assert _corrected(rec, "flops") == 280.0
+    # no calibration -> identity
+    assert _corrected({"full": {"flops": 7.0}}, "flops") == 7.0
+
+
+def test_shape_bytes():
+    from repro.launch.dryrun import _shape_bytes
+    assert _shape_bytes("bf16", "8,16") == 256
+    assert _shape_bytes("f32", "10") == 40
+    assert _shape_bytes("pred", "7") == 7
+
+
+def test_shard_hint_noop_without_mesh():
+    from repro.models.layers import shard_hint
+    x = jnp.ones((4, 4))
+    y = shard_hint(x, "model", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_shard_hint_drops_indivisible_axes():
+    from repro.models.layers import shard_hint
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with jax.set_mesh(mesh):
+        @jax.jit
+        def f(x):
+            return shard_hint(x, ("pod", "data"), "model", None)
+        y = f(jnp.ones((3, 5, 2)))   # nothing divides -> still fine
+        assert y.shape == (3, 5, 2)
+
+
+def test_roofline_param_counts_moe_active():
+    from benchmarks.roofline import _param_counts
+    p = _param_counts("qwen3-moe-235b-a22b")
+    # ~235B total, ~22B active is the arch's name plate
+    assert 2.0e11 < p["total"] < 2.6e11
+    assert 1.5e10 < p["active"] < 3.0e10

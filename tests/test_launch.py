@@ -1,0 +1,151 @@
+"""Launch layer: sharding rules, input specs, sharded==dense equivalence."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get_config, runnable_cells
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_host_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_runnable_cells_count():
+    """40 assigned cells minus the 8 documented long_500k skips."""
+    cells = runnable_cells()
+    assert len(cells) == 32
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"xlstm-125m", "recurrentgemma-9b"}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_input_specs_all_cells(arch):
+    cfg = get_config(arch)
+    for sname, shape in SHAPES.items():
+        if sname == "long_500k" and not cfg.subquadratic:
+            continue
+        specs = SP.input_specs(cfg, shape)
+        if shape.kind in ("train", "prefill"):
+            t = specs["tokens"]
+            assert t.shape[0] == shape.global_batch
+            assert t.dtype == jnp.int32
+        else:
+            assert specs["token"].shape == (shape.global_batch, 1)
+            assert "caches" in specs
+        # every leaf must be abstract (no allocation)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_param_sharding_rules_cover_paths():
+    """Every parameter gets a sharding; attn/ffn kernels get model axes."""
+    cfg = get_config("qwen2-0.5b")
+    from repro.models.transformer import param_shapes
+    shapes = param_shapes(cfg)
+    mesh = make_host_mesh()
+    sh = SH.param_shardings(shapes, mesh)
+    flat = jax.tree_util.tree_flatten_with_path(sh)[0]
+    assert len(flat) == len(jax.tree.leaves(shapes))
+    by_path = {jax.tree_util.keystr(p): s for p, s in flat}
+    wq = [s for p, s in by_path.items() if "wq" in p and "kernel" in p]
+    assert all("model" in str(s.spec) for s in wq)
+
+
+def test_fsdp_adds_data_axis():
+    cfg = get_config("granite-20b")
+    from repro.models.transformer import param_shapes
+    shapes = param_shapes(cfg)
+    mesh = make_host_mesh()
+    plain = SH.param_shardings(shapes, mesh, fsdp=False)
+    fsdp = SH.param_shardings(shapes, mesh, fsdp=True)
+    n_data_plain = sum("data" in str(s.spec) for s in jax.tree.leaves(plain))
+    n_data_fsdp = sum("data" in str(s.spec) for s in jax.tree.leaves(fsdp))
+    assert n_data_fsdp > n_data_plain
+
+
+def test_zero1_no_duplicate_axes():
+    cfg = get_config("llama4-scout-17b-a16e")
+    from repro.launch.steps import train_state_shardings
+    sh = train_state_shardings(cfg, make_host_mesh())
+    for s in jax.tree.leaves(sh.__dict__ if hasattr(sh, "__dict__") else sh):
+        spec = getattr(s, "spec", None)
+        if spec is None:
+            continue
+        axes = [a for part in spec for a in
+                (part if isinstance(part, tuple) else (part,))
+                if a is not None]
+        assert len(axes) == len(set(axes)), f"duplicate axis in {spec}"
+
+
+SHARDED_EQ_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.registry import get_config
+    from repro.launch.steps import make_train_step, init_train_state, \\
+        StepOptions, train_state_shardings
+    from repro.launch.sharding import batch_shardings
+    import dataclasses
+
+    arch = sys.argv[1]
+    cfg = get_config(arch).reduce(n_layers=2, d_model=32, d_ff=64,
+                                  vocab_size=64, n_heads=4, n_kv_heads=2)
+    if cfg.n_experts:
+        # capacity is defined per data shard, so drop behaviour is mesh-
+        # dependent by design; compare at no-drop capacity for exactness
+        cfg = dataclasses.replace(cfg, n_experts=4, top_k=2,
+                                  capacity_factor=8.0)
+    batch = {"tokens": np.random.default_rng(0).integers(
+        0, 64, size=(8, 17)).astype(np.int32)}
+
+    def run(mesh):
+        with jax.set_mesh(mesh):
+            state = init_train_state(jax.random.key(0), cfg)
+            step = make_train_step(cfg, mesh, StepOptions(lr=1e-3,
+                                                          total_steps=10))
+            b = jax.device_put(batch, batch_shardings(batch, mesh))
+            for _ in range(2):
+                state, metrics = jax.jit(step)(state, b)
+            return float(metrics["loss"]), state
+
+    types = (jax.sharding.AxisType.Auto,) * 2
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"), axis_types=types)
+    mesh8 = jax.make_mesh((2, 4), ("data", "model"), axis_types=types)
+    l1, s1 = run(mesh1)
+    l8, s8 = run(mesh8)
+    diff = max(float(np.max(np.abs(
+        np.asarray(jax.device_get(a), np.float32)
+        - np.asarray(jax.device_get(b), np.float32))))
+        for a, b in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(s8["params"])))
+    print(json.dumps({"loss1": l1, "loss8": l8, "max_param_diff": diff}))
+""")
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-moe-235b-a22b",
+                                  "recurrentgemma-9b"])
+def test_sharded_equals_dense_subprocess(arch):
+    """Train 2 steps on a 1-device and a 2x4 mesh: identical results.
+
+    This is the fundamental SPMD correctness contract; runs in a
+    subprocess because forcing 8 host devices must precede jax init.
+    """
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_EQ_SCRIPT, arch],
+        capture_output=True, text=True, cwd=REPO, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert abs(out["loss1"] - out["loss8"]) < 1e-3, out
+    assert out["max_param_diff"] < 1e-3, out

@@ -1,0 +1,140 @@
+"""Fault-tolerant trainer + batched server behaviour tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.lm import LMDataConfig, Prefetcher, SyntheticLM, make_source
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import StepOptions
+from repro.models import transformer as T
+from repro.runtime.server import Server
+from repro.runtime.trainer import SimulatedFailure, Trainer, TrainerConfig
+
+
+def _tiny_setup(tmp_path, max_steps=8, failure_at=None, ckpt_every=2,
+                seed=0):
+    cfg = get_config("qwen2-0.5b").reduce(n_layers=2, d_model=32, d_ff=64,
+                                          vocab_size=64)
+    data = SyntheticLM(LMDataConfig(vocab_size=64, seq_len=16,
+                                    global_batch=4, seed=7))
+    tcfg = TrainerConfig(max_steps=max_steps, ckpt_dir=str(tmp_path / "ck"),
+                         ckpt_every=ckpt_every, failure_at=failure_at,
+                         log_every=100, seed=seed)
+    mesh = make_host_mesh()
+    opts = StepOptions(lr=1e-3, total_steps=max_steps, warmup=0)
+    return Trainer(cfg, tcfg, mesh, data, opts)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tr = _tiny_setup(tmp_path, max_steps=12)
+    out = tr.run()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert out["final_step"] == 12
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_failure_injection_raises(tmp_path):
+    tr = _tiny_setup(tmp_path, max_steps=8, failure_at=3, ckpt_every=2)
+    with pytest.raises(SimulatedFailure):
+        tr.run()
+
+
+def test_restart_recovers_and_is_deterministic(tmp_path):
+    """Kill at step 5, restart from ckpt at 4 -> final params identical to
+    an uninterrupted run (deterministic data + step-keyed state)."""
+    clean = _tiny_setup(tmp_path / "a", max_steps=8)
+    clean_out = clean.run()
+    faulty = _tiny_setup(tmp_path / "b", max_steps=8, failure_at=5,
+                         ckpt_every=1)
+    out = faulty.run_with_restarts(max_restarts=2)
+    assert out["final_step"] == 8
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=1e-5),
+        clean.state["params"], faulty.state["params"])
+
+
+def test_straggler_watchdog_fires(tmp_path):
+    events = []
+    tr = _tiny_setup(tmp_path, max_steps=10)
+    tr.on_straggler = lambda s, dt: events.append(s)
+    # inject an artificially slow "step" time via the watchdog directly
+    for s in range(6):
+        tr._watchdog(s, 0.01)
+    tr._watchdog(6, 0.5)
+    assert events == [6]
+
+
+def test_prefetcher_orders_batches():
+    src = SyntheticLM(LMDataConfig(vocab_size=16, seq_len=4, global_batch=2))
+    pf = Prefetcher(src, start_step=3, depth=2)
+    steps = [next(pf)[0] for _ in range(4)]
+    pf.close()
+    assert steps == [3, 4, 5, 6]
+
+
+def test_shard_determinism():
+    base = LMDataConfig(vocab_size=97, seq_len=8, global_batch=4, n_shards=2)
+    s0 = SyntheticLM(dataclasses.replace(base, shard_id=0))
+    s1 = SyntheticLM(dataclasses.replace(base, shard_id=1))
+    a0, a1 = s0.batch_at(5)["tokens"], s1.batch_at(5)["tokens"]
+    assert a0.shape == (2, 9)
+    assert not np.array_equal(a0, a1)          # disjoint shard streams
+    np.testing.assert_array_equal(a0, s0.batch_at(5)["tokens"])  # replayable
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+def _server_setup(n_slots=3, max_len=64):
+    cfg = get_config("qwen2-0.5b").reduce(n_layers=2, d_model=32, d_ff=64,
+                                          vocab_size=64)
+    params = T.init_params(jax.random.key(0), cfg)
+    return cfg, params, Server(cfg, params, n_slots=n_slots, max_len=max_len)
+
+
+def test_server_single_request_matches_manual_decode():
+    cfg, params, srv = _server_setup()
+    prompt = np.array([5, 9, 2, 7], np.int32)
+    rid = srv.submit(prompt, max_new_tokens=6)
+    out = srv.run_until_done()
+    # manual greedy decode
+    logits, caches = T.prefill(params, cfg, jnp.asarray(prompt[None, :]),
+                               max_len=64)
+    toks = [int(T.greedy_token(logits)[0, 0])]
+    for _ in range(5):
+        lg, caches = T.decode_step(
+            params, cfg, jnp.asarray([[toks[-1]]], jnp.int32), caches)
+        toks.append(int(T.greedy_token(lg)[0, 0]))
+    assert out[rid] == toks
+
+
+def test_server_batched_requests_isolated():
+    """Concurrent requests must not contaminate each other's outputs."""
+    cfg, params, srv = _server_setup(n_slots=3)
+    prompts = [np.array([1, 2, 3], np.int32),
+               np.array([10, 20, 30, 40, 50], np.int32),
+               np.array([7], np.int32)]
+    rids = [srv.submit(p, max_new_tokens=5) for p in prompts]
+    batched = srv.run_until_done()
+
+    for p, rid in zip(prompts, rids):
+        cfg2, params2, solo = _server_setup(n_slots=1)
+        srid = solo.submit(p, max_new_tokens=5)
+        solo_out = solo.run_until_done()
+        assert batched[rid] == solo_out[srid], f"slot contamination on {rid}"
+
+
+def test_server_slot_reuse():
+    cfg, params, srv = _server_setup(n_slots=1)
+    r1 = srv.submit(np.array([3, 4], np.int32), max_new_tokens=3)
+    r2 = srv.submit(np.array([9, 8, 7], np.int32), max_new_tokens=3)
+    out = srv.run_until_done()
+    assert len(out[r1]) == 3 and len(out[r2]) == 3
