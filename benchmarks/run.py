@@ -70,8 +70,12 @@ def main() -> None:
 
     from benchmarks import kernel_bench
     kb = kernel_bench.run()
-    worst = max(
-        r["max_err"] for res in kb.values() for r in res.values())
+    artifact = kernel_bench.perf_artifact(kb)
+    # Perf-trajectory artifact: op/byte counts, MXU dispatches per step,
+    # oracle max-err -- later PRs diff this file to catch regressions.
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(artifact, f, indent=1)
+    worst = artifact["oracle_max_err"]
     rows.append(("kernels_vs_oracle", 0.0, f"worst_err={worst:.2e}"))
 
     # roofline summary (requires dry-run artifacts; skipped if absent)

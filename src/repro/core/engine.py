@@ -188,6 +188,13 @@ def mlp_layer_cycles(
         # static mask: weights pre-arranged offline, fetch stays streaming
         kept_per_out *= w.keep_frac
     pe = out_batches * kept_per_out * (nominal / effective) / eta
+    # Front-end fill: INTENTIONALLY hw.simd_lanes (16), not hw.simd_latency
+    # (4, the KAN path's term).  In parallel mode the first weight fetch is
+    # gated by the TSE compacting a full simd_lanes-wide input group (the
+    # zero-skip offsets exist only once the whole group is scanned), not by
+    # the silu pipeline depth; the 16-cycle charge is part of the Table II /
+    # Fig. 6 calibration.  Pinned by tests/test_engine_calibration.py --
+    # "fixing" this to simd_latency shifts every MLP point by -12 cycles.
     fill = hw.simd_lanes + out_batches * hw.outbatch_fill
     macs = w.effective_macs(zero_free=zero_skip, pattern=pattern)
     return LayerCycles(total=pe + fill, pe=pe, bound="PE", macs=macs)

@@ -30,7 +30,12 @@ from repro.core.splines import (
     silu,
     spu_op_count,
 )
-from repro.kernels.kan_fused.ops import flatten_t, kan_linear
+from repro.kernels.kan_fused.ops import (
+    DEFAULT_VERSION,
+    flatten_t,
+    fuse_wt,
+    kan_linear,
+)
 
 Params = Dict[str, jax.Array]
 
@@ -42,6 +47,9 @@ class KANConfig:
     spec: SplineSpec = SplineSpec(4, 3)          # paper default: G=4, K=3
     pattern: Optional[Tuple[int, ...]] = None    # tiled 4-bit stage-2 mask
     impl: str = "auto"                           # kernel dispatch
+    version: int = DEFAULT_VERSION               # fused-kernel generation
+    blocks: Optional[Tuple[int, int, int]] = None  # (bm, bi, bn) override;
+    # None -> autotune-cache lookup, then kernel defaults
 
     @property
     def basis_mask(self) -> Optional[PatternMask]:
@@ -82,7 +90,14 @@ def kan_apply(params: Params, x: jax.Array, cfg: KANConfig) -> jax.Array:
     """Apply the layer; leading batch dims arbitrary."""
     t_flat = flatten_t(params["t"], cfg.kb)
     return kan_linear(x, params["w_b"], t_flat, cfg.spec, cfg.kb,
-                      impl=cfg.impl)
+                      impl=cfg.impl, version=cfg.version, blocks=cfg.blocks)
+
+
+def kan_fused_weights(params: Params, cfg: KANConfig) -> jax.Array:
+    """Build-time fused [w_b ; t] layout shared by the v2 kernel and the jnp
+    path (rows interleaved per input feature; see ops.fuse_wt)."""
+    return fuse_wt(params["w_b"], flatten_t(params["t"], cfg.kb),
+                   cfg.n_bases_kept)
 
 
 def kan_stack_apply(

@@ -189,6 +189,29 @@ def scatter_local(vals: jax.Array, cell: jax.Array, spec: SplineSpec) -> jax.Arr
     return dense
 
 
+def scatter_kept(
+    vals: jax.Array,         # (..., K+1) local basis values
+    cell: jax.Array,         # (...,) int32 cell offsets
+    kbv: jax.Array,          # (nbk,) int32 kept basis indices
+    n_active: int,           # K+1 (static)
+) -> jax.Array:
+    """Scatter the K+1 local values into the *kept-basis* columns only.
+
+    Broadcast iota-comparison form of the TSE stage-2 filter: one delta
+    tensor ``kbv - cell`` and exactly ``n_active`` (= K+1) where-selects,
+    independent of how many basis columns are kept.  With
+    ``kbv = arange(n_bases)`` this degenerates to ``scatter_local``.  Shared
+    by the jnp fallback (ops.py) and mirrored by the Pallas kernels (which
+    receive ``kbv`` as a kernel input, since Pallas forbids captured constant
+    arrays).
+    """
+    delta = kbv.astype(jnp.int32) - cell[..., None]        # (..., nbk)
+    out = jnp.zeros(delta.shape, vals.dtype)
+    for j in range(n_active):
+        out = out + jnp.where(delta == j, vals[..., j:j + 1], 0.0)
+    return out
+
+
 def gather_local(dense: jax.Array, cell: jax.Array, spec: SplineSpec) -> jax.Array:
     """Inverse of ``scatter_local`` (used in tests)."""
     out = []

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel layer: the compute hot-spots the paper itself optimizes.
+
+Packages: ``kan_fused`` (pipeline-mode KAN layer, v1/v2 generations),
+``pattern_matmul`` (stage-2 compacted matmul), ``spline_basis`` (SPU basis
+evaluation).  Each ships <name>.py (Pallas kernel) + ops.py (impl dispatch)
++ ref.py (pure-jnp oracle).
+
+``autotune`` is the shared block-size tuning subsystem: a persistent JSON
+cache keyed by (kernel, shape bucket, dtype, backend) consulted by every
+ops.py ``impl="auto"`` dispatch.  See DESIGN.md Sec. 9.
+"""

@@ -9,20 +9,43 @@ tile and bi-wide input-feature chunk,
   1. SIMD:  silu(x) on the VPU,
   2. SPU :  the K+1 non-zero basis values via the stage-buffer de Boor
             recursion (INV_LUT reciprocals, f32 interval location),
-  3. TSE :  mask-compare scatter of those values directly into the
-            *compacted* activation layout -- when the stage-2 pattern mask is
-            a tiled 4-bit pattern, only the kept basis columns are ever
-            produced, so the MXU contraction below shrinks by keep/4
+  3. TSE :  broadcast iota-comparison scatter of those values directly into
+            the *compacted* activation layout -- when the stage-2 pattern
+            mask is a tiled 4-bit pattern, only the kept basis columns are
+            ever produced, so the MXU contraction below shrinks by keep/4
             (real stage-2 saving, batch-uniform),
-  4. PE  :  two MXU contractions accumulated in fp32 VMEM scratch:
-            silu(x) @ w_b  and  act_scattered @ t_compact.
+  4. PE  :  MXU contraction(s) accumulated in fp32 VMEM scratch.
 
 The (B, n_in*(G+K)) intermediate never touches HBM: that is the pipeline.
 
-Weight layout: t_flat is (n_in * nbk, n_out), rows grouped by input feature,
-basis-index fastest -- matches the scatter's (bm, bi, nbk) -> (bm, bi*nbk)
-flatten.  kb (kept basis indices, static tuple) selects which of the G+K
-columns exist; kb = range(G+K) when no pattern mask is set.
+Two kernel generations are kept:
+
+* **v1** (``kan_fused_pallas``): two MXU dispatches per grid step --
+  ``silu(x) @ w_b`` and ``act_scattered @ t_compact`` accumulate separately
+  into the same scratch.  Retained as the measured baseline for
+  ``benchmarks/kernel_bench.py``.
+* **v2** (``kan_fused_pallas_v2``, the default dispatch): ONE MXU dispatch
+  per grid step.  The kernel forms a single activation tile
+  ``[silu(x) | scattered_bases]`` of shape ``(bm, bi*(nbk+1))`` and
+  contracts it once against a build-time row-interleaved weight matrix
+  ``[w_b ; t]`` (``ops.fuse_wt``): per input feature, one silu row followed
+  by its nbk spline rows.  Halves MXU dispatches and accumulator
+  read-modify-writes per step; VPU work is unchanged.
+
+TSE scatter: both kernels receive the kept-basis indices as an int32 *input
+array* ``kb_arr`` (Pallas forbids captured constant arrays) and scatter with
+``delta = kb - cell`` plus exactly K+1 where-selects -- O(K+1) independent of
+nbk, replacing the old Python-unrolled O(nbk*(K+1)) select chain.
+
+Weight layouts: v1 takes ``t_flat`` (n_in * nbk, n_out), rows grouped by
+input feature, basis-index fastest.  v2 takes the fused ``wt``
+(n_in * (nbk+1), n_out) with the silu row interleaved first per feature.
+kb (kept basis indices, static tuple) selects which of the G+K columns
+exist; kb = range(G+K) when no pattern mask is set.
+
+Block sizes (bm, bi, bn) are tunable per shape/dtype/backend through
+``repro.kernels.autotune`` (see DESIGN.md Sec. 9); the defaults below are
+the untuned fallback.
 """
 from __future__ import annotations
 
@@ -40,26 +63,23 @@ DEFAULT_BM = 128
 DEFAULT_BI = 64
 DEFAULT_BN = 128
 
+# MXU contractions issued per (bm, bn, i) grid step -- the quantity v2
+# halves.  kernel_bench verifies these against the traced jaxpr.
+MXU_DISPATCHES_PER_STEP = {1: 2, 2: 1}
 
-def _kan_kernel(
-    x_ref, wb_ref, t_ref, o_ref, acc_ref,
-    *, spec: SplineSpec, kb: Tuple[int, ...], i_steps: int,
-):
-    i = pl.program_id(2)
 
-    @pl.when(i == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+def _spu_tile(x, spec: SplineSpec):
+    """SIMD + SPU stages shared by both kernel generations.
 
-    x = x_ref[...]                       # (bm, bi)
+    Returns (silu(x), [K+1 local basis value planes], cell int32), all shaped
+    like ``x`` except the list entries.
+    """
     dtype = x.dtype
     K = spec.order
-    nbk = len(kb)
 
     # --- SIMD core: silu branch (raw, un-clipped input; Eq. 3). -----------
     xf32 = x.astype(jnp.float32)
     s = (xf32 * jax.lax.logistic(xf32)).astype(dtype)
-    acc_ref[...] += jnp.dot(s, wb_ref[...], preferred_element_type=jnp.float32)
 
     # --- SPU array: interval location (f32, exact) + stage-buffer de Boor.
     eps = 1e-6 * (spec.x1 - spec.x0)
@@ -67,7 +87,7 @@ def _kan_kernel(
     u = (xc - spec.x0) * jnp.asarray(spec.inv_h, jnp.float32)
     cell = jnp.clip(jnp.floor(u), 0, spec.grid_size - 1)
     r = (u - cell).astype(dtype)
-    cell_i = cell.astype(jnp.int32)      # (bm, bi)
+    cell_i = cell.astype(jnp.int32)
 
     rights = [jnp.asarray(d + 1.0, dtype) - r for d in range(K)]   # stage buf
     lefts = [r + jnp.asarray(d, dtype) for d in range(K)]
@@ -80,19 +100,39 @@ def _kan_kernel(
             vals[rr] = saved + rights[rr] * temp
             saved = lefts[j - rr - 1] * temp
         vals[j] = saved
+    return s, vals, cell_i
 
-    # --- TSE: scatter the K+1 values into the kept-basis columns only. ----
-    # kb entries are static Python ints (scalar literals in the kernel);
-    # pallas forbids captured constant *arrays*, so the scatter is unrolled
-    # over the <=20 kept columns.
-    cols = []
-    for q_idx in kb:
-        dq = q_idx - cell_i                               # (bm, bi)
-        col = jnp.zeros_like(r)
-        for j in range(K + 1):
-            col = col + jnp.where(dq == j, vals[j], 0.0)
-        cols.append(col)
-    act = jnp.stack(cols, axis=-1)                        # (bm, bi, nbk)
+
+def _tse_scatter(vals, cell_i, kb_row, nbk: int):
+    """TSE: broadcast iota-comparison scatter into the kept-basis columns.
+
+    ``kb_row`` is the (1, nbk) int32 kept-index array (a kernel INPUT, not a
+    captured constant).  O(K+1) selects regardless of nbk.
+    """
+    bm, bi = cell_i.shape
+    delta = kb_row.reshape(1, 1, nbk) - cell_i[..., None]    # (bm, bi, nbk)
+    act = jnp.zeros((bm, bi, nbk), vals[0].dtype)
+    for j in range(len(vals)):
+        act = act + jnp.where(delta == j, vals[j][..., None], 0.0)
+    return act
+
+
+def _kan_kernel(
+    x_ref, kb_ref, wb_ref, t_ref, o_ref, acc_ref,
+    *, spec: SplineSpec, nbk: int, i_steps: int,
+):
+    """v1: two MXU dispatches per step (silu branch + spline branch)."""
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                       # (bm, bi)
+    s, vals, cell_i = _spu_tile(x, spec)
+    acc_ref[...] += jnp.dot(s, wb_ref[...], preferred_element_type=jnp.float32)
+
+    act = _tse_scatter(vals, cell_i, kb_ref[...], nbk)    # (bm, bi, nbk)
 
     # --- PE array: MAC against the compacted spline weights. --------------
     bm, bi = x.shape
@@ -106,9 +146,43 @@ def _kan_kernel(
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kan_kernel_v2(
+    x_ref, kb_ref, wt_ref, o_ref, acc_ref,
+    *, spec: SplineSpec, nbk: int, i_steps: int,
+):
+    """v2: ONE MXU dispatch per step on the fused [silu | bases] tile."""
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                       # (bm, bi)
+    s, vals, cell_i = _spu_tile(x, spec)
+    act = _tse_scatter(vals, cell_i, kb_ref[...], nbk)    # (bm, bi, nbk)
+
+    # --- PE array: single fused contraction.  Per feature p the activation
+    # columns are [silu(x_p), B_{kb0}(x_p), ..., B_{kb(nbk-1)}(x_p)],
+    # matching fuse_wt's row interleave [w_b[p] ; t[p, kb]].
+    bm, bi = x.shape
+    fused = jnp.concatenate([s[..., None], act], axis=-1)  # (bm, bi, nbk+1)
+    acc_ref[...] += jnp.dot(
+        fused.reshape(bm, bi * (nbk + 1)), wt_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == i_steps - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _clamp_blocks(B, n_in, n_out, bm, bi, bn):
+    return min(bm, max(8, B)), min(bi, n_in), min(bn, n_out)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "kb", "bm", "bi", "bn", "interpret"),
+    static_argnames=("spec", "kb", "bm", "bi", "bn", "interpret", "out_dtype"),
 )
 def kan_fused_pallas(
     x: jax.Array,            # (B, n_in)
@@ -121,36 +195,96 @@ def kan_fused_pallas(
     bi: int = DEFAULT_BI,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
+    out_dtype=None,
 ) -> jax.Array:
+    """v1 kernel: separate silu / spline contractions (2 dispatches/step).
+
+    ``out_dtype`` (default: x.dtype) lets bf16 inputs emit the f32
+    accumulator directly (mixed-precision serving / oracle comparison).
+    """
+    out_dtype = out_dtype or x.dtype
     B, n_in = x.shape
     n_out = w_b.shape[1]
     kb = tuple(range(spec.n_bases)) if kb is None else tuple(kb)
     nbk = len(kb)
     assert t_flat.shape == (n_in * nbk, n_out), (t_flat.shape, n_in, nbk)
 
-    bm = min(bm, max(8, B))
-    bi = min(bi, n_in)
-    bn = min(bn, n_out)
+    bm, bi, bn = _clamp_blocks(B, n_in, n_out, bm, bi, bn)
     pb, pi, pn = -B % bm, -n_in % bi, -n_out % bn
     # Pad inputs with x0 (in-range) and weights with zeros: contributes
     # nothing because the padded w_b/t rows are zero.
     xp = jnp.pad(x, ((0, pb), (0, pi)), constant_values=spec.x0)
     wbp = jnp.pad(w_b, ((0, pi), (0, pn)))
     tp = jnp.pad(t_flat, ((0, pi * nbk), (0, pn)))
+    kb_arr = jnp.asarray(kb, jnp.int32)[None, :]          # (1, nbk) input
     Bp, Ip, Np = B + pb, n_in + pi, n_out + pn
     i_steps = Ip // bi
 
     out = pl.pallas_call(
-        functools.partial(_kan_kernel, spec=spec, kb=kb, i_steps=i_steps),
+        functools.partial(_kan_kernel, spec=spec, nbk=nbk, i_steps=i_steps),
         grid=(Bp // bm, Np // bn, i_steps),
         in_specs=[
             pl.BlockSpec((bm, bi), lambda b, n, i: (b, i)),
+            pl.BlockSpec((1, nbk), lambda b, n, i: (0, 0)),
             pl.BlockSpec((bi, bn), lambda b, n, i: (i, n)),
             pl.BlockSpec((bi * nbk, bn), lambda b, n, i: (i, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda b, n, i: (b, n)),
-        out_shape=jax.ShapeDtypeStruct((Bp, Np), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(xp, wbp, tp)
+    )(xp, kb_arr, wbp, tp)
+    return out[:B, :n_out]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "kb", "bm", "bi", "bn", "interpret", "out_dtype"),
+)
+def kan_fused_pallas_v2(
+    x: jax.Array,            # (B, n_in)
+    wt: jax.Array,           # (n_in * (nbk+1), n_out), fused rows (fuse_wt)
+    spec: SplineSpec,
+    kb: Optional[Tuple[int, ...]] = None,
+    *,
+    bm: int = DEFAULT_BM,
+    bi: int = DEFAULT_BI,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """v2 kernel: single fused contraction (1 MXU dispatch/step).
+
+    ``out_dtype`` (default: x.dtype) lets bf16 inputs emit the f32
+    accumulator directly (mixed-precision serving / oracle comparison).
+    """
+    out_dtype = out_dtype or x.dtype
+    B, n_in = x.shape
+    n_out = wt.shape[1]
+    kb = tuple(range(spec.n_bases)) if kb is None else tuple(kb)
+    nbk = len(kb)
+    assert wt.shape == (n_in * (nbk + 1), n_out), (wt.shape, n_in, nbk)
+
+    bm, bi, bn = _clamp_blocks(B, n_in, n_out, bm, bi, bn)
+    pb, pi, pn = -B % bm, -n_in % bi, -n_out % bn
+    xp = jnp.pad(x, ((0, pb), (0, pi)), constant_values=spec.x0)
+    wtp = jnp.pad(wt, ((0, pi * (nbk + 1)), (0, pn)))
+    kb_arr = jnp.asarray(kb, jnp.int32)[None, :]          # (1, nbk) input
+    Bp, Ip, Np = B + pb, n_in + pi, n_out + pn
+    i_steps = Ip // bi
+
+    out = pl.pallas_call(
+        functools.partial(_kan_kernel_v2, spec=spec, nbk=nbk,
+                          i_steps=i_steps),
+        grid=(Bp // bm, Np // bn, i_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bi), lambda b, n, i: (b, i)),
+            pl.BlockSpec((1, nbk), lambda b, n, i: (0, 0)),
+            pl.BlockSpec((bi * (nbk + 1), bn), lambda b, n, i: (i, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda b, n, i: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, kb_arr, wtp)
     return out[:B, :n_out]

@@ -3,17 +3,35 @@
 "jnp" is the XLA path used by CPU tests and the multi-pod dry-run: it keeps
 the same structural sparsity (local K+1 evaluation + static column
 compaction) expressed in jnp ops, so cost_analysis sees the real op mix.
+The jnp path shares the *fused* weight layout with the v2 Pallas kernel
+(``fuse_wt``): both contract one [silu(x) | scattered_bases] activation
+against the row-interleaved [w_b ; t] matrix, so the two paths are
+numerically step-for-step equivalent (the jnp oracle the kernel is validated
+against at 1e-4).
+
+Block sizes for the Pallas path resolve, in order: explicit ``blocks``
+argument > autotune cache hit for (shape bucket, dtype, backend) > module
+defaults.  See ``repro.kernels.autotune``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.splines import SplineSpec, bases_local, scatter_local, silu
-from repro.kernels.kan_fused.kan_fused import kan_fused_pallas
+from repro.core.splines import SplineSpec, bases_local, scatter_kept, silu
+from repro.kernels import autotune
+from repro.kernels.kan_fused.kan_fused import (
+    DEFAULT_BI,
+    DEFAULT_BM,
+    DEFAULT_BN,
+    kan_fused_pallas,
+    kan_fused_pallas_v2,
+)
+
+DEFAULT_VERSION = 2
 
 
 def _on_tpu() -> bool:
@@ -31,7 +49,74 @@ def flatten_t(t: jax.Array, kb: Optional[Tuple[int, ...]] = None) -> jax.Array:
     return t.reshape(n_in * nbk, n_out)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "kb", "impl"))
+def fuse_wt(w_b: jax.Array, t_flat: jax.Array, nbk: int) -> jax.Array:
+    """Row-interleave [w_b ; t] into the v2 fused weight layout.
+
+    (n_in, n_out) + (n_in*nbk, n_out) -> (n_in*(nbk+1), n_out): per input
+    feature p, row p*(nbk+1) is w_b[p] (the silu branch) and rows
+    p*(nbk+1)+1.. are its nbk kept spline rows -- matching the kernel's
+    [silu | bases] activation tile flatten.
+    """
+    n_in, n_out = w_b.shape
+    assert t_flat.shape == (n_in * nbk, n_out), (t_flat.shape, n_in, nbk)
+    t3 = t_flat.reshape(n_in, nbk, n_out)
+    wt = jnp.concatenate([w_b[:, None, :], t3], axis=1)
+    return wt.reshape(n_in * (nbk + 1), n_out)
+
+
+def resolve_blocks(
+    B: int, n_in: int, n_out: int, nbk: int, dtype,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    version: int = DEFAULT_VERSION,
+) -> Dict[str, int]:
+    """(bm, bi, bn) for the fused kernel: explicit > cached > defaults."""
+    if blocks is not None:
+        bm, bi, bn = blocks
+        return {"bm": bm, "bi": bi, "bn": bn}
+    hit = autotune.lookup_blocks(
+        f"kan_fused_v{version}", (B, n_in, n_out, nbk), dtype)
+    if hit is not None:
+        return hit
+    return {"bm": DEFAULT_BM, "bi": DEFAULT_BI, "bn": DEFAULT_BN}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "kb", "version", "out_dtype"))
+def _kan_linear_jnp(
+    x: jax.Array, w_b: jax.Array, t_flat: jax.Array, spec: SplineSpec,
+    kb: Tuple[int, ...], version: int, out_dtype=None,
+) -> jax.Array:
+    n_in = x.shape[-1]
+    nbk = len(kb)
+    # Stage 1: only K+1 basis values are computed (VPU-op saving); stage 2:
+    # broadcast iota-comparison scatter straight into the kept-basis columns
+    # (K+1 selects, independent of nbk) -- same TSE form as the kernels.
+    vals, cell = bases_local(spec.clip(x), spec)           # (B, n_in, K+1)
+    kbv = jnp.asarray(kb, jnp.int32)
+    act = scatter_kept(vals, cell, kbv, spec.n_active)     # (B, n_in, nbk)
+    # silu in f32 then cast, matching the kernel's SIMD stage exactly.
+    s = silu(x.astype(jnp.float32)).astype(x.dtype)
+    if version >= 2:
+        # Fused layout: one contraction, same layout as the v2 kernel.
+        wt = fuse_wt(w_b, t_flat, nbk)
+        fused = jnp.concatenate([s[..., None], act], axis=-1)
+        y = jnp.dot(
+            fused.reshape(-1, n_in * (nbk + 1)), wt,
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        y = jnp.dot(s, w_b, preferred_element_type=jnp.float32)
+        y = y + jnp.dot(
+            act.reshape(-1, n_in * nbk), t_flat,
+            preferred_element_type=jnp.float32,
+        )
+    return y.astype(out_dtype or x.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "kb", "impl", "version", "blocks", "out_dtype"),
+)
 def kan_linear(
     x: jax.Array,            # (..., n_in)
     w_b: jax.Array,          # (n_in, n_out)
@@ -40,8 +125,24 @@ def kan_linear(
     kb: Optional[Tuple[int, ...]] = None,
     *,
     impl: str = "auto",
+    version: int = DEFAULT_VERSION,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    out_dtype=None,
 ) -> jax.Array:
-    """phi(x) per Eq. 3 with two-stage sparsity; batch dims preserved."""
+    """phi(x) per Eq. 3 with two-stage sparsity; batch dims preserved.
+
+    ``version`` selects the kernel generation (2 = single-MXU-pass fused
+    contraction, 1 = legacy two-dispatch); ``blocks`` overrides the
+    (bm, bi, bn) tile sizes, else the autotune cache is consulted.
+    ``out_dtype`` (default x.dtype) emits the fp32 accumulator un-rounded
+    when set to float32 with bf16 inputs.
+
+    jit note: weight fusion and the autotune-cache lookup run at trace
+    time, i.e. once per (shape, static-args) combination -- eager callers
+    pay them once, not per step.  A cache entry tuned AFTER the first trace
+    of a shape is picked up on the next process (or jit-cache clear), not
+    mid-process.
+    """
     lead = x.shape[:-1]
     n_in = x.shape[-1]
     xf = x.reshape(-1, n_in)
@@ -51,28 +152,19 @@ def kan_linear(
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "jnp"
     if impl in ("pallas", "pallas_interpret"):
-        y = kan_fused_pallas(
-            xf, w_b, t_flat, spec, kb, interpret=(impl == "pallas_interpret")
-        )
-    elif impl == "jnp":
-        # Stage 1: only K+1 basis values are computed (VPU-op saving)...
-        vals, cell = bases_local(spec.clip(xf), spec)      # (B, n_in, K+1)
-        if nbk == spec.n_bases:
-            # ...then scattered to dense layout for one big contraction.
-            act = scatter_local(vals, cell, spec)           # (B,n_in,G+K)
+        bk = resolve_blocks(xf.shape[0], n_in, w_b.shape[1], nbk, x.dtype,
+                            blocks, version)
+        interpret = impl == "pallas_interpret"
+        if version >= 2:
+            wt = fuse_wt(w_b, t_flat, nbk)
+            y = kan_fused_pallas_v2(xf, wt, spec, kb, interpret=interpret,
+                                    out_dtype=out_dtype, **bk)
         else:
-            # Stage 2: scatter directly into the kept-basis columns.
-            kbv = jnp.asarray(kb, jnp.int32)
-            delta = kbv[None, None, :] - cell[..., None]    # (B,n_in,nbk)
-            act = jnp.zeros(delta.shape, x.dtype)
-            for j in range(spec.n_active):
-                act = act + jnp.where(delta == j, vals[..., j:j + 1], 0.0)
-        y = jnp.dot(silu(xf), w_b, preferred_element_type=jnp.float32)
-        y = y + jnp.dot(
-            act.reshape(-1, n_in * nbk), t_flat,
-            preferred_element_type=jnp.float32,
-        )
-        y = y.astype(x.dtype)
+            y = kan_fused_pallas(xf, w_b, t_flat, spec, kb,
+                                 interpret=interpret, out_dtype=out_dtype,
+                                 **bk)
+    elif impl == "jnp":
+        y = _kan_linear_jnp(xf, w_b, t_flat, spec, kb, version, out_dtype)
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return y.reshape(*lead, w_b.shape[-1])

@@ -8,18 +8,38 @@ byte saving is visible to cost_analysis either way.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sparsity import PatternMask
-from repro.kernels.pattern_matmul.pattern_matmul import matmul_compact_pallas
+from repro.kernels import autotune
+from repro.kernels.pattern_matmul.pattern_matmul import (
+    DEFAULT_BK,
+    DEFAULT_BM,
+    DEFAULT_BN,
+    matmul_compact_pallas,
+)
 from repro.kernels.pattern_matmul.ref import ACTS
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_blocks(
+    M: int, K: int, N: int, dtype,
+    blocks: Optional[Tuple[int, int, int]] = None,
+) -> Dict[str, int]:
+    """(bm, bk, bn) for the compact matmul: explicit > cached > defaults."""
+    if blocks is not None:
+        bm, bk, bn = blocks
+        return {"bm": bm, "bk": bk, "bn": bn}
+    hit = autotune.lookup_blocks("pattern_matmul", (M, K, N), dtype)
+    if hit is not None:
+        return hit
+    return {"bm": DEFAULT_BM, "bk": DEFAULT_BK, "bn": DEFAULT_BN}
 
 
 def pattern_linear(
@@ -30,10 +50,13 @@ def pattern_linear(
     *,
     act: Optional[str] = None,
     impl: str = "auto",
+    blocks: Optional[Tuple[int, int, int]] = None,
 ) -> jax.Array:
     """y = act(x[..., keep] @ w[keep, :] + bias).
 
     x: (..., K); w: (K, N).  With mask=None this is a plain fused linear.
+    ``blocks`` overrides the (bm, bk, bn) tiles; None consults the autotune
+    cache before falling back to the defaults.
     """
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
@@ -43,10 +66,12 @@ def pattern_linear(
         w = jnp.take(w, idx, axis=0)         # folded at compile time
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "pallas":
-        y = matmul_compact_pallas(xf, w, bias, act=act)
-    elif impl == "pallas_interpret":
-        y = matmul_compact_pallas(xf, w, bias, act=act, interpret=True)
+    if impl in ("pallas", "pallas_interpret"):
+        bk = resolve_blocks(xf.shape[0], xf.shape[1], w.shape[1], x.dtype,
+                            blocks)
+        y = matmul_compact_pallas(xf, w, bias, act=act,
+                                  interpret=(impl == "pallas_interpret"),
+                                  **bk)
     elif impl == "jnp":
         y = jnp.dot(xf, w, preferred_element_type=jnp.float32)
         if bias is not None:

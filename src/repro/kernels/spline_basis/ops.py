@@ -3,24 +3,49 @@
 Dispatch: Pallas kernel on TPU, interpret-mode Pallas when explicitly
 requested (tests), pure-jnp densified path otherwise (CPU / dry-run -- XLA
 then sees the real op mix, which is what cost_analysis reads).
+
+The Pallas path's ``block_n`` resolves: explicit argument > autotune-cache
+hit for (n bucket, dtype, backend) > module default.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.splines import SplineSpec, bases_local, scatter_local
-from repro.kernels.spline_basis.spline_basis import spline_basis_pallas
+from repro.kernels import autotune
+from repro.kernels.spline_basis.spline_basis import (
+    DEFAULT_BLOCK_N,
+    spline_basis_pallas,
+)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "impl"))
-def spline_basis(x: jax.Array, spec: SplineSpec, *, impl: str = "auto") -> jax.Array:
+def resolve_block_n(n: int, n_bases: int, dtype,
+                    block_n: Optional[int] = None) -> int:
+    """block_n for the SPU kernel: explicit > cached > default."""
+    if block_n is not None:
+        return block_n
+    hit = autotune.lookup_blocks("spline_basis", (n, n_bases), dtype)
+    if hit is not None:
+        return hit["block_n"]
+    return DEFAULT_BLOCK_N
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _spline_basis_jnp(x: jax.Array, spec: SplineSpec) -> jax.Array:
+    vals, cell = bases_local(x, spec)
+    return scatter_local(vals, cell, spec)
+
+
+def spline_basis(x: jax.Array, spec: SplineSpec, *, impl: str = "auto",
+                 block_n: Optional[int] = None) -> jax.Array:
     """Dense (..., G+K) basis values.
 
     impl: "auto" (pallas on TPU else jnp) | "pallas" | "pallas_interpret"
@@ -30,13 +55,12 @@ def spline_basis(x: jax.Array, spec: SplineSpec, *, impl: str = "auto") -> jax.A
     flat = x.reshape(-1)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "pallas":
-        out = spline_basis_pallas(flat, spec)
-    elif impl == "pallas_interpret":
-        out = spline_basis_pallas(flat, spec, interpret=True)
+    if impl in ("pallas", "pallas_interpret"):
+        bn = resolve_block_n(flat.shape[0], spec.n_bases, x.dtype, block_n)
+        out = spline_basis_pallas(flat, spec, block_n=bn,
+                                  interpret=(impl == "pallas_interpret"))
     elif impl == "jnp":
-        vals, cell = bases_local(flat, spec)
-        out = scatter_local(vals, cell, spec)
+        out = _spline_basis_jnp(flat, spec)
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return out.reshape(*shape, spec.n_bases)

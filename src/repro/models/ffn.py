@@ -41,6 +41,11 @@ class FFNConfig:
     kan_order: int = 3
     kan_hidden: Optional[int] = None    # default: param-matched
     kan_impl: str = "auto"
+    kan_version: int = 2                # fused-kernel generation (2 = v2)
+    # (bm, bi, bn) tile override for the fused KAN kernels; None defers to
+    # the autotune cache (repro.kernels.autotune) so tuned shapes are
+    # served tuned tiles in every transformer layer.
+    kan_blocks: Optional[Tuple[int, int, int]] = None
 
     @property
     def hidden_mask(self) -> Optional[PatternMask]:
@@ -53,9 +58,11 @@ class FFNConfig:
         h = self.kan_hidden or max(8, self.d_ff // (spec.n_bases + 1))
         pat = (sparsity_to_pattern(self.pattern_rate)
                if self.pattern_rate > 0 else None)
-        up = KANConfig(self.d_model, h, spec, pattern=pat, impl=self.kan_impl)
+        up = KANConfig(self.d_model, h, spec, pattern=pat, impl=self.kan_impl,
+                       version=self.kan_version, blocks=self.kan_blocks)
         down = KANConfig(h, self.d_model, spec, pattern=pat,
-                         impl=self.kan_impl)
+                         impl=self.kan_impl, version=self.kan_version,
+                         blocks=self.kan_blocks)
         return up, down
 
 

@@ -1,0 +1,61 @@
+"""Import shim: property tests skip (not error) when hypothesis is absent.
+
+Minimal environments (the tier-1 CI image, fresh containers) may not ship
+``hypothesis``; importing it at module scope used to kill collection of three
+whole test files.  Test modules import via
+
+    from _hypothesis_fallback import HAVE_HYPOTHESIS, hypothesis, st
+
+When hypothesis is installed this re-exports the real modules.  Otherwise it
+provides stand-ins whose ``@given`` decorator replaces the test with a
+zero-argument function that calls ``pytest.skip`` (zero-arg so pytest does
+not mistake strategy kwargs for fixtures), and whose strategies accept
+anything and return inert objects.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any call / attribute chain; returned values are inert."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _HypothesisStub:
+        def given(self, *args, **kwargs):
+            def deco(fn):
+                def skipper():
+                    pytest.skip("hypothesis not installed")
+
+                skipper.__name__ = fn.__name__
+                skipper.__doc__ = fn.__doc__
+                return skipper
+
+            return deco
+
+        def settings(self, *args, **kwargs):
+            def deco(fn):
+                return fn
+
+            return deco
+
+        def assume(self, condition):
+            return bool(condition)
+
+        def note(self, *args, **kwargs):
+            pass
+
+    hypothesis = _HypothesisStub()
+    st = _AnyStrategy()

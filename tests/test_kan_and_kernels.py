@@ -1,8 +1,7 @@
 """KAN layer + kan_fused + pattern_matmul kernels vs oracles; sparsity."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_fallback import hypothesis, st  # skips, not errors, when absent
 import jax
 import jax.numpy as jnp
 import numpy as np

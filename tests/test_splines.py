@@ -1,6 +1,5 @@
 """B-spline invariants + spline_basis kernel vs oracle."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_fallback import hypothesis, st  # skips, not errors, when absent
 import jax
 import jax.numpy as jnp
 import numpy as np
