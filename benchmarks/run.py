@@ -78,6 +78,19 @@ def main() -> None:
     worst = artifact["oracle_max_err"]
     rows.append(("kernels_vs_oracle", 0.0, f"worst_err={worst:.2e}"))
 
+    # serving throughput: the VIKIN backend under a request burst
+    # (wall-clock + simulated cycles; artifact -> BENCH_serving.json)
+    from benchmarks import serving_bench
+    sv = serving_bench.run(n_requests=16 if args.fast else 32)
+    for arch in ("vikin-kan2", "vikin-mixed"):
+        r = sv[arch]
+        rows.append((
+            f"serving_{arch.replace('-', '_')}",
+            r["sim_latency_s"] / max(r["requests"], 1) * 1e6,
+            f"wall_rps={r['wall_rps']:.1f};"
+            f"sim_cycles_per_req={r['sim_cycles_per_req']:.0f};"
+            f"switches={r['mode_switches']}"))
+
     # roofline summary (requires dry-run artifacts; skipped if absent)
     try:
         import glob

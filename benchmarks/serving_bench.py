@@ -1,0 +1,89 @@
+"""Serving-throughput benchmark: the VIKIN backend under a request burst.
+
+Drives the continuous-batching engine (runtime/server.Engine) over the
+``--arch vikin-*`` workloads and reports wall-clock throughput next to the
+simulated VIKIN figures (cycles, latency, mode switches) -- the serving-path
+analogue of the per-kernel BENCH_kernels.json trajectory.
+
+Usage: PYTHONPATH=src python -m benchmarks.serving_bench [--requests N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.models.ffn import vikin_stack_init
+from repro.runtime.backends import VikinBackend
+from repro.runtime.server import Engine
+
+ARTIFACT = "BENCH_serving.json"
+
+
+def serve_burst(arch: str, *, n_requests: int = 32, n_slots: int = 8,
+                impl: str = "auto", seed: int = 0) -> Dict[str, float]:
+    """Serve one burst; returns throughput + simulated-hardware stats."""
+    model = VIKIN_ARCHS[arch]
+    params = vikin_stack_init(jax.random.key(seed), model)
+    backend = VikinBackend(model, params, impl=impl)
+    eng = Engine(backend, n_slots=n_slots)
+
+    rng = np.random.default_rng(seed)
+    for _ in range(n_requests):
+        eng.submit(rng.random(model.sizes[0], dtype=np.float32))
+    # warm the jit caches outside the timed run: the full-occupancy bucket
+    # and the trailing partial batch's bucket (n_requests % n_slots)
+    backend.warmup(min(n_slots, n_requests))
+    if n_requests % n_slots:
+        backend.warmup(n_requests % n_slots)
+    out = eng.run_until_done()
+    assert len(out) == n_requests
+
+    s = eng.stats
+    per_req_cycles = s["sim_cycles"] / max(s["served"], 1)
+    return {
+        "arch": arch,
+        "requests": int(s["served"]),
+        "batches": int(s["ticks"]),
+        "n_slots": n_slots,
+        "wall_s": s["wall_s"],
+        "wall_rps": s["served"] / s["wall_s"] if s["wall_s"] else 0.0,
+        "sim_cycles": s["sim_cycles"],
+        "sim_cycles_per_req": per_req_cycles,
+        "sim_latency_s": s["sim_latency_s"],
+        "sim_rps": (s["served"] / s["sim_latency_s"]
+                    if s["sim_latency_s"] else 0.0),
+        "mode_switches": int(s["mode_switches"]),
+        "reconfig_cycles": s["reconfig_cycles"],
+        "mode_plan": backend.plan.summary()["segments"],
+    }
+
+
+def run(n_requests: int = 32, n_slots: int = 8,
+        archs=("vikin-kan2", "vikin-mlp3", "vikin-mixed")) -> Dict[str, Dict]:
+    results = {a: serve_burst(a, n_requests=n_requests, n_slots=n_slots)
+               for a in archs}
+    with open(ARTIFACT, "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=8)
+    args = ap.parse_args()
+    results = run(n_requests=args.requests, n_slots=args.slots)
+    print("arch,requests,wall_rps,sim_cycles_per_req,sim_rps,mode_switches")
+    for a, r in results.items():
+        print(f"{a},{r['requests']},{r['wall_rps']:.1f},"
+              f"{r['sim_cycles_per_req']:.0f},{r['sim_rps']:.0f},"
+              f"{r['mode_switches']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,28 @@ from repro.models import transformer as T
 from repro.runtime.server import Server
 
 
+def vikin_demo():
+    """Same engine, different backend: one-shot KAN/MLP inference through
+    the fused kernels, with simulated VIKIN cycles next to wall-clock."""
+    from repro.configs.vikin_models import VIKIN_ARCHS
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.backends import VikinBackend
+    from repro.runtime.server import Engine
+
+    model = VIKIN_ARCHS["vikin-mixed"]
+    params = vikin_stack_init(jax.random.key(0), model)
+    eng = Engine(VikinBackend(model, params), n_slots=4)
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(rng.random(model.sizes[0], dtype=np.float32))
+            for _ in range(6)]
+    out = eng.run_until_done()
+    s = eng.stats
+    print(f"\nvikin-mixed: {len(rids)} requests in {int(s['ticks'])} "
+          f"batches, {s['sim_cycles']:.0f} simulated cycles "
+          f"({int(s['mode_switches'])} mode switches); "
+          f"out[0] mean={float(out[rids[0]].mean()):+.4f}")
+
+
 def main():
     cfg = get_config("qwen2-0.5b").reduce(n_layers=4, d_model=128,
                                           d_ff=256, vocab_size=512)
@@ -43,3 +65,4 @@ def main():
 
 if __name__ == "__main__":
     main()
+    vikin_demo()

@@ -1,9 +1,10 @@
 """Architecture registry: ``--arch <id>`` resolution for every launcher."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.configs.vikin_models import VIKIN_ARCHS
 from repro.configs import (
     granite_20b,
     llama4_scout_17b_a16e,
@@ -30,6 +31,18 @@ def get_config(name: str) -> ArchConfig:
     if name not in ARCHS:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
     return ARCHS[name]
+
+
+def get_serving_config(name: str) -> Tuple[str, object]:
+    """Resolve a serving ``--arch``: ("vikin", PaperModelConfig) for the
+    KAN/MLP feed-forward backend, ("transformer", ArchConfig) otherwise."""
+    if name in VIKIN_ARCHS:
+        return "vikin", VIKIN_ARCHS[name]
+    if name in ARCHS:
+        return "transformer", ARCHS[name]
+    raise KeyError(
+        f"unknown arch {name!r}; transformer archs: {sorted(ARCHS)}; "
+        f"vikin archs: {sorted(VIKIN_ARCHS)}")
 
 
 def get_shape(name: str) -> ShapeSpec:

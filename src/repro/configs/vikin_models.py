@@ -6,36 +6,96 @@ Four models on the Traffic 72h->96h forecasting task:
 
 These drive benchmarks/table1_models.py (training + error metrics) and the
 VIKIN cycle-model benchmarks (Figs. 6-8, Table II).
+
+``VIKIN_ARCHS`` additionally exposes the models (plus a mixed KAN/MLP stack
+and a CI-sized smoke model) as ``--arch vikin-*`` ids for the serving
+launcher (launch/serve.py -> runtime/backends.VikinBackend): ``kinds`` gives
+a per-layer KAN/MLP assignment so one workload can exercise the host
+processor's mode-switch schedule (core/modes.ModePlan), which is the paper's
+reconfigurability claim made servable.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.modes import LayerKind
 from repro.core.splines import SplineSpec
 
 
 @dataclasses.dataclass(frozen=True)
 class PaperModelConfig:
     name: str
-    kind: str                      # "mlp" | "kan"
+    kind: str                      # "mlp" | "kan" | "mixed" (see ``kinds``)
     sizes: Tuple[int, ...]
     grid: int = 4
     order: int = 3
     pattern_rate: float = 0.0      # Table II deployment rates
+    # per-layer kind override; required for kind == "mixed", else derived
+    kinds: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.kinds is not None and len(self.kinds) != self.n_layers:
+            raise ValueError(
+                f"{self.name}: kinds has {len(self.kinds)} entries for "
+                f"{self.n_layers} layers")
+        if self.kind == "mixed" and self.kinds is None:
+            raise ValueError(f"{self.name}: kind='mixed' requires kinds")
 
     @property
     def spec(self) -> SplineSpec:
         return SplineSpec(self.grid, self.order)
 
+    @property
+    def n_layers(self) -> int:
+        return len(self.sizes) - 1
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """One "kan"/"mlp" entry per layer."""
+        if self.kinds is not None:
+            return self.kinds
+        return (self.kind,) * self.n_layers
+
+    def layer_kind_enums(self) -> List[LayerKind]:
+        return [LayerKind(k) for k in self.layer_kinds]
+
     def param_count(self) -> int:
         n = 0
-        for a, b in zip(self.sizes, self.sizes[1:]):
-            if self.kind == "mlp":
+        for kind, a, b in zip(self.layer_kinds, self.sizes, self.sizes[1:]):
+            if kind == "mlp":
                 n += a * b + b
             else:
                 n += a * b * (1 + self.spec.n_bases)
         return n
+
+    def layer_works(self, nnz_rates: Optional[Sequence[float]] = None):
+        """Per-layer LayerWork entries for the cycle model (core/engine).
+
+        ``nnz_rates[i]`` is the measured input-activation density of layer i
+        (MLP zero-skip); defaults to dense.  The stage-2 pattern rate
+        applies to hidden layers only -- the raw feature input is never
+        masked, matching the serving stack's forward.
+        """
+        from repro.core.engine import LayerWork
+
+        nnz = list(nnz_rates) if nnz_rates is not None else [1.0] * self.n_layers
+        out = []
+        for i, (kind, a, b) in enumerate(
+                zip(self.layer_kinds, self.sizes, self.sizes[1:])):
+            if kind == "kan":
+                out.append(LayerWork(LayerKind.KAN, a, b, spec=self.spec,
+                                     pattern_rate=self.pattern_rate))
+            else:
+                pr = self.pattern_rate if i > 0 else 0.0
+                out.append(LayerWork(LayerKind.MLP, a, b,
+                                     in_nnz_rate=nnz[i], pattern_rate=pr))
+        return out
+
+    def reduce(self, **over) -> "PaperModelConfig":
+        """Interface parity with ArchConfig.reduce(); the paper models are
+        already CPU-smoke-sized, so this is replace-only."""
+        return dataclasses.replace(self, **over)
 
 
 MLP4 = PaperModelConfig("mlp-4layer", "mlp", (72, 304, 304, 96))
@@ -48,3 +108,25 @@ PAPER_MODELS = {m.name: m for m in (MLP4, MLP3, KAN3, KAN2)}
 # Table II deployment configuration
 TABLE2_KAN = dataclasses.replace(KAN2, pattern_rate=0.5)
 TABLE2_MLP = dataclasses.replace(MLP3, pattern_rate=0.25)
+
+# ---------------------------------------------------------------------------
+# Serving archs (--arch vikin-*): paper models + mixed / smoke workloads.
+# ---------------------------------------------------------------------------
+
+# Alternating MLP -> KAN -> MLP stack: two mode switches per inference, the
+# worst case for the host's reconfiguration schedule (paper Sec. IV-A).
+MIXED = PaperModelConfig("vikin-mixed", "mixed", (72, 304, 32, 96),
+                         kinds=("mlp", "kan", "mlp"), pattern_rate=0.5)
+
+# CI-sized smoke workload: one switch, both kernel families, stage-2 mask.
+SMALL = PaperModelConfig("vikin-small", "mixed", (16, 32, 8),
+                         kinds=("mlp", "kan"), pattern_rate=0.5)
+
+VIKIN_ARCHS: Dict[str, PaperModelConfig] = {
+    "vikin-kan2": dataclasses.replace(TABLE2_KAN, name="vikin-kan2"),
+    "vikin-kan3": dataclasses.replace(KAN3, name="vikin-kan3"),
+    "vikin-mlp3": dataclasses.replace(TABLE2_MLP, name="vikin-mlp3"),
+    "vikin-mlp4": dataclasses.replace(MLP4, name="vikin-mlp4"),
+    "vikin-mixed": MIXED,
+    "vikin-small": SMALL,
+}

@@ -256,6 +256,30 @@ def run_model(
     )
 
 
+def serving_report(
+    layers: Sequence[LayerWork],
+    hw: VikinHW = VikinHW(),
+    *,
+    batch: int = 1,
+) -> dict:
+    """One served batch's simulated-hardware accounting (runtime backends).
+
+    The single-instance engine streams batch rows sequentially (run_model),
+    so cycles scale linearly in ``batch`` and each instance pays the mode
+    plan's reconfiguration schedule once; per-request attribution is
+    therefore ``sim_cycles / batch``.
+    """
+    plan = ModePlan.for_layers([w.kind for w in layers])
+    rep = run_model(layers, hw, batch=max(batch, 1))
+    return {
+        "sim_cycles": rep.cycles,
+        "sim_latency_s": rep.latency_s,
+        "sim_macs": rep.macs,
+        "mode_switches": float(plan.n_switches * batch),
+        "reconfig_cycles": float(plan.reconfig_cycles * batch),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Edge-GPU analytical baseline (Table II footnote 2: Jetson Xavier NX).
 # ---------------------------------------------------------------------------

@@ -70,3 +70,12 @@ class ModePlan:
             else:
                 out.append((m, 1))
         return out
+
+    def summary(self) -> dict:
+        """Servable description of the schedule (launch/serve, benchmarks)."""
+        return {
+            "modes": [m.value for m in self.modes],
+            "segments": [(m.value, n) for m, n in self.segments()],
+            "n_switches": self.n_switches,
+            "reconfig_cycles": self.reconfig_cycles,
+        }

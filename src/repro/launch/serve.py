@@ -1,32 +1,75 @@
-"""Serving launcher: load (or init) a model and run the batched server.
+"""Serving launcher: load (or init) a model and run the batched engine.
+
+Transformer archs decode tokens over slot KV caches:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --scale smoke --requests 6 --new-tokens 12
+
+VIKIN archs (configs/vikin_models.VIKIN_ARCHS) serve stacked KAN/MLP
+feed-forward workloads through the fused kernels, one inference per
+request, and report simulated VIKIN cycles next to wall-clock:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
+      --requests 8 --slots 4 --impl pallas_interpret
 """
 from __future__ import annotations
 
 import argparse
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--new-tokens", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
-
+def _serve_vikin(args, model):
     import jax
     import numpy as np
+
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.backends import VikinBackend
+    from repro.runtime.server import Engine
+
+    if args.scale == "smoke":
+        model = model.reduce()
+    params = vikin_stack_init(jax.random.key(0), model)
+    backend = VikinBackend(model, params, impl=args.impl)
+    eng = Engine(backend, n_slots=args.slots)
+
+    plan = backend.plan.summary()
+    print(f"arch {model.name}: layers={list(model.layer_kinds)} "
+          f"sizes={list(model.sizes)} pattern_rate={model.pattern_rate}")
+    print(f"mode plan: {plan['segments']} "
+          f"({plan['n_switches']} switches, "
+          f"{plan['reconfig_cycles']} reconfig cycles/inference)")
+
+    rng = np.random.default_rng(0)
+    n_in = model.sizes[0]
+    for _ in range(args.requests):
+        eng.submit(rng.random(n_in, dtype=np.float32))
+    out = eng.run_until_done()
+    for rid in sorted(out):
+        y = out[rid]
+        print(f"req {rid}: out[{y.shape[0]}] mean={float(y.mean()):+.4f}")
+
+    s, tp = eng.stats, eng.throughput()
+    print(f"\n{int(s['served'])} requests in {int(s['ticks'])} batches: "
+          f"wall {s['wall_s']*1e3:.1f} ms ({tp.get('wall_rps', 0):.1f} req/s)")
+    print(f"simulated VIKIN: {s['sim_cycles']:.0f} cycles, "
+          f"{s['sim_latency_s']*1e6:.1f} us "
+          f"({tp.get('sim_rps', 0):.0f} req/s), "
+          f"{int(s['mode_switches'])} mode switches "
+          f"({s['reconfig_cycles']:.0f} reconfig cycles)")
+
+
+def _serve_transformer(args, cfg):
+    import jax
+    import numpy as np
+
     from repro.checkpoint import latest_step, restore_checkpoint
-    from repro.configs.registry import get_config
     from repro.models import transformer as T
     from repro.runtime.server import Server
 
-    cfg = get_config(args.arch)
+    if cfg.enc_dec or cfg.frontend is not None:
+        raise SystemExit(
+            f"arch {cfg.name!r} ({cfg.family}) needs modality inputs "
+            f"(frames/patches) that the token-only serving path does not "
+            f"provide; serve a decoder-only arch or a vikin-* workload")
     if args.scale == "smoke":
         cfg = cfg.reduce()
     params = T.init_params(jax.random.key(0), cfg)
@@ -45,6 +88,35 @@ def main():
     out = srv.run_until_done()
     for rid, toks in sorted(out.items()):
         print(f"req {rid}: {toks}")
+    s = srv.stats
+    print(f"\n{int(s['served'])} requests, {int(s['ticks'])} ticks, "
+          f"wall {s['wall_s']:.2f} s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"],
+                    help="kernel dispatch for vikin-* archs")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_serving_config
+
+    try:
+        family, cfg = get_serving_config(args.arch)
+    except KeyError as e:
+        raise SystemExit(str(e.args[0]))
+    if family == "vikin":
+        _serve_vikin(args, cfg)
+    else:
+        _serve_transformer(args, cfg)
 
 
 if __name__ == "__main__":

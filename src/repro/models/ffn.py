@@ -140,3 +140,74 @@ def ffn_apply(params: Dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:
         h = kan_apply(params["kan_up"], x, up_cfg)
         return kan_apply(params["kan_down"], h, down_cfg)
     raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Stacked KAN/MLP feed-forward workloads (the VIKIN serving path).
+#
+# A ``model`` here is any config with ``.sizes``, ``.layer_kinds``, ``.spec``
+# and ``.pattern_rate`` (configs/vikin_models.PaperModelConfig) -- duck-typed
+# so the model layer stays import-free of the config registry.  Contract:
+#
+#   * "kan" layers lower to the fused v2 kernel (core/kan.kan_apply) with
+#     the stage-2 basis mask; their nonlinearity is intrinsic, and inputs
+#     are clipped into the spline domain by the kernel itself.
+#   * "mlp" layers lower to the pattern-sparse linear (pattern_linear) with
+#     a fused ReLU epilogue on every non-final layer; the m-of-4 mask
+#     applies to HIDDEN inputs only (layer i > 0) -- raw request features
+#     are never masked.
+# ---------------------------------------------------------------------------
+
+
+def stack_layer_cfgs(model) -> list:
+    """Per-layer lowering descriptors: ("kan", KANConfig) or ("mlp", dict)."""
+    spec = model.spec
+    pat = (sparsity_to_pattern(model.pattern_rate)
+           if model.pattern_rate > 0 else None)
+    out = []
+    for i, (kind, a, b) in enumerate(
+            zip(model.layer_kinds, model.sizes, model.sizes[1:])):
+        last = i == len(model.sizes) - 2
+        if kind == "kan":
+            out.append(("kan", KANConfig(a, b, spec, pattern=pat)))
+        elif kind == "mlp":
+            mask = (tiled_mask(a, pat) if pat is not None and i > 0
+                    else None)
+            out.append(("mlp", {"n_in": a, "n_out": b, "mask": mask,
+                                "act": None if last else "relu"}))
+        else:
+            raise ValueError(f"unknown stack layer kind {kind!r}")
+    return out
+
+
+def vikin_stack_init(key, model, dtype=jnp.float32) -> list:
+    """He-init MLP layers / KAN-paper init for KAN layers, one dict each."""
+    import numpy as np
+
+    ks = jax.random.split(key, max(len(model.sizes) - 1, 1))
+    params = []
+    for i, (kind, cfg) in enumerate(stack_layer_cfgs(model)):
+        if kind == "kan":
+            params.append(kan_init(ks[i], cfg, dtype))
+        else:
+            a, b = cfg["n_in"], cfg["n_out"]
+            params.append({
+                "w": (jax.random.normal(ks[i], (a, b), dtype)
+                      * np.sqrt(2.0 / a)),
+                "b": jnp.zeros((b,), dtype),
+            })
+    return params
+
+
+def vikin_stack_apply(params: list, x: jax.Array, model, *,
+                      impl: str = "auto") -> jax.Array:
+    """Run the full stack; ``impl`` threads the kernel dispatch through
+    every layer (auto | jnp | pallas | pallas_interpret)."""
+    h = x
+    for p, (kind, cfg) in zip(params, stack_layer_cfgs(model)):
+        if kind == "kan":
+            h = kan_apply(p, h, dataclasses.replace(cfg, impl=impl))
+        else:
+            h = pattern_linear(h, p["w"], cfg["mask"], p["b"],
+                               act=cfg["act"], impl=impl)
+    return h

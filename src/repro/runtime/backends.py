@@ -1,0 +1,260 @@
+"""Model backends for the continuous-batching engine (runtime/server.py).
+
+The engine owns slots, the queue and the tick loop; everything model-shaped
+lives behind the ``ModelBackend`` protocol:
+
+  * ``init_state``  -- allocate per-slot state (KV-cache lanes, input
+                       staging buffers, ...), batch dim = n_slots.
+  * ``prefill``     -- stage one admitted request into its slot.
+  * ``step``        -- one batched engine iteration over the active slots;
+                       appends outputs to the Request objects and marks
+                       finished ones ``done``.
+  * ``batch_report``-- simulated-hardware accounting for the step that was
+                       just executed (VIKIN cycle model), or None when the
+                       backend has no hardware model (transformers).
+
+``TransformerBackend`` is the previous Server body (autoregressive decode
+over slot KV caches) moved behind the protocol, unchanged.
+
+``VikinBackend`` serves the paper's stacked KAN/MLP feed-forward workloads
+(configs/vikin_models.PaperModelConfig): a request is one feature vector,
+the batched step pads active slots into a power-of-two shape bucket and runs
+the whole stack through the fused v2 KAN / pattern-matmul kernel entry
+points in one jitted call, so retrace count is log2(n_slots), not n_slots.
+``min_bucket`` defaults to 2 because XLA lowers M=1 contractions through a
+different (gemv) path whose accumulation order differs from the gemm tiles;
+padding a singleton batch to M=2 keeps batched and one-at-a-time execution
+bitwise identical (test-pinned).  The workload's ``ModePlan`` (core/modes)
+rides along: every served batch is charged its mode-switch schedule in the
+simulated-cycle report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import VikinHW, serving_report
+from repro.core.modes import ModePlan
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request.
+
+    ``prompt`` is the request payload: int32 token ids for autoregressive
+    backends, a float feature vector for feed-forward (VIKIN) backends.
+    Token backends append into ``generated``; one-shot backends set
+    ``output``.  ``result()`` returns whichever the backend produced.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    output: Optional[np.ndarray] = None
+    done: bool = False
+
+    def result(self):
+        return self.generated if self.output is None else self.output
+
+
+class ModelBackend:
+    """Protocol (documented base): the engine calls exactly these four."""
+
+    def init_state(self, n_slots: int, max_len: int):
+        raise NotImplementedError
+
+    def validate(self, req: Request) -> None:
+        """Reject malformed payloads at submit time (before the request
+        enters the queue), so prefill can never fail mid-run and drop
+        already-admitted work."""
+
+    def prefill(self, state, slot: int, req: Request):
+        """Stage ``req`` into lane ``slot``; returns the new state."""
+        raise NotImplementedError
+
+    def step(self, state, slot_req: Sequence[Optional[Request]]):
+        """One batched iteration over active slots; returns the new state.
+
+        Mutates the active Request objects (append outputs, set ``done``).
+        """
+        raise NotImplementedError
+
+    def batch_report(self, n_active: int) -> Optional[Dict[str, float]]:
+        """Simulated-hardware stats for the step just run, or None."""
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Transformer (autoregressive) backend -- the original Server body.
+# ---------------------------------------------------------------------------
+
+
+class TransformerBackend(ModelBackend):
+    """Slot KV-cache decode for ArchConfig transformer stacks."""
+
+    def __init__(self, cfg, params):
+        import jax
+
+        from repro.models import transformer as T
+
+        self.cfg, self.params = cfg, params
+        self._T, self._jax = T, jax
+        self._decode = jax.jit(
+            lambda p, tok, c: T.decode_step(p, cfg, tok, c))
+        # prefill is jitted per exact prompt length: no padding, so slot
+        # caches carry the true per-request position (the per-row 'len').
+        self._prefill_cache = {}
+        self.n_slots = self.max_len = None
+
+    def init_state(self, n_slots: int, max_len: int):
+        self.n_slots, self.max_len = n_slots, max_len
+        return self._T.init_caches(self.cfg, n_slots, max_len)
+
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_cache:
+            cfg, T = self.cfg, self._T
+
+            def fn(params, tokens):
+                return T.prefill(params, cfg, tokens, max_len=self.max_len)
+
+            self._prefill_cache[length] = self._jax.jit(fn)
+        return self._prefill_cache[length]
+
+    def prefill(self, caches, slot: int, req: Request):
+        """Prefill one request and splice its (batch=1) cache into lane
+        ``slot`` of the server's (batch=n_slots) caches."""
+        import jax.numpy as jnp
+
+        jax, T = self._jax, self._T
+        tokens = np.asarray(req.prompt, np.int32)[None, :]
+        logits, cache = self._prefill_fn(tokens.shape[1])(
+            self.params, jnp.asarray(tokens))
+        next_tok = int(jax.device_get(T.greedy_token(logits))[0, 0])
+        req.generated.append(next_tok)
+
+        def put(full, new):
+            # find the batch dim: the dim where full is n_slots-wide and the
+            # fresh cache is 1-wide (dim 0 for plain, dim 1 under the layer
+            # stack).  Everything else (shapes) matches by construction.
+            for d in range(min(2, full.ndim)):
+                if (full.shape[d] == self.n_slots and d < new.ndim
+                        and new.shape[d] == 1):
+                    sl = tuple([slice(None)] * d + [slice(slot, slot + 1)])
+                    return full.at[sl].set(new.astype(full.dtype))
+            return full
+
+        return jax.tree.map(put, caches, cache)
+
+    def step(self, caches, slot_req: Sequence[Optional[Request]]):
+        import jax.numpy as jnp
+
+        jax, T = self._jax, self._T
+        active = [s for s, r in enumerate(slot_req) if r is not None]
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            toks[s, 0] = slot_req[s].generated[-1]
+        logits, caches = self._decode(self.params, jnp.asarray(toks), caches)
+        nxt = np.asarray(jax.device_get(T.greedy_token(logits)))
+        for s in active:
+            req = slot_req[s]
+            tok = int(nxt[s, 0])
+            req.generated.append(tok)
+            if (len(req.generated) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                req.done = True
+        return caches
+
+
+# ---------------------------------------------------------------------------
+# VIKIN backend -- stacked KAN/MLP feed-forward serving.
+# ---------------------------------------------------------------------------
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+class VikinBackend(ModelBackend):
+    """Serve a PaperModelConfig KAN/MLP stack through the fused kernels.
+
+    Each request carries one ``(n_in,)`` float32 feature vector and finishes
+    in a single engine tick.  Active slots are gathered into a zero-padded
+    power-of-two batch bucket (>= ``min_bucket``) and run through one jitted
+    forward, so the jit cache holds one entry per bucket, not per batch
+    size.  ``plan`` is the workload's host-issued mode-switch schedule; the
+    per-batch simulated cycles (batch_report) include its reconfiguration
+    charge via core/engine.run_model.
+    """
+
+    def __init__(self, model, params, *, impl: str = "auto",
+                 hw: Optional[VikinHW] = None, min_bucket: int = 2,
+                 nnz_rates: Optional[Sequence[float]] = None):
+        import jax
+
+        from repro.models.ffn import vikin_stack_apply
+
+        self.model, self.params = model, params
+        self.impl, self.hw = impl, hw or VikinHW()
+        self.min_bucket = min_bucket
+        self.plan = ModePlan.for_layers(model.layer_kind_enums())
+        self.layers = model.layer_works(nnz_rates)
+        self.n_in = int(model.sizes[0])
+        self._fwd = jax.jit(
+            lambda p, x: vikin_stack_apply(p, x, model, impl=impl))
+        self._report_cache: Dict[int, Dict[str, float]] = {}
+        self.n_slots = None
+
+    def init_state(self, n_slots: int, max_len: int):
+        self.n_slots = n_slots
+        # staging buffer of request inputs, one lane per slot
+        return np.zeros((n_slots, self.n_in), np.float32)
+
+    def validate(self, req: Request) -> None:
+        vec = np.asarray(req.prompt, np.float32).reshape(-1)
+        if vec.shape[0] != self.n_in:
+            raise ValueError(
+                f"request {req.rid}: payload has {vec.shape[0]} features, "
+                f"model {self.model.name!r} expects {self.n_in}")
+
+    def prefill(self, inputs, slot: int, req: Request):
+        inputs = inputs.copy()
+        inputs[slot] = np.asarray(req.prompt, np.float32).reshape(-1)
+        return inputs
+
+    def bucket(self, n_active: int) -> int:
+        """Always a power of two (>= min_bucket), even for non-pow2 slot
+        counts: padding a few extra rows is cheaper than running a batch
+        shape outside the pinned bitwise-determinism regime."""
+        return _next_pow2(max(n_active, self.min_bucket))
+
+    def warmup(self, n_active: int) -> None:
+        """Pre-trace the bucket that ``n_active`` requests would use, so
+        benchmarks can keep compilation out of their timed region."""
+        self._fwd(self.params,
+                  np.zeros((self.bucket(n_active), self.n_in), np.float32))
+
+    def step(self, inputs, slot_req: Sequence[Optional[Request]]):
+        active = [s for s, r in enumerate(slot_req) if r is not None]
+        bucket = self.bucket(len(active))
+        xb = np.zeros((bucket, self.n_in), np.float32)
+        for j, s in enumerate(active):
+            xb[j] = inputs[s]
+        y = np.asarray(self._fwd(self.params, xb))
+        for j, s in enumerate(active):
+            slot_req[s].output = y[j].copy()
+            slot_req[s].done = True
+        return inputs
+
+    def batch_report(self, n_active: int) -> Dict[str, float]:
+        """VIKIN cycle model for one served batch (batches stream
+        sequentially through the single engine instance, so cycles scale
+        linearly in n_active and every batch pays the mode plan once per
+        instance)."""
+        if n_active not in self._report_cache:
+            self._report_cache[n_active] = serving_report(
+                self.layers, self.hw, batch=n_active)
+        return dict(self._report_cache[n_active])

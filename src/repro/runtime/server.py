@@ -1,132 +1,122 @@
-"""Batched serving loop with a slot-based KV cache manager.
+"""Backend-agnostic continuous-batching engine with slot-based state lanes.
 
-Continuous-batching-lite: the server owns ``n_slots`` cache lanes; incoming
-requests claim free slots, every engine tick decodes ONE token for all
-active slots in a single jitted step (the batch dimension is the slot
-array), finished slots are recycled.  Prefill runs per-request into the
-slot's cache lanes.  This is the vLLM-style execution contract scaled down
-to what one process can test: slot reuse, padding correctness, per-request
-determinism (batched output == single-request output, test-pinned).
+Continuous-batching-lite: the engine owns ``n_slots`` state lanes; incoming
+requests claim free slots, every engine tick runs ONE batched backend step
+for all active slots (the batch dimension is the slot array), finished slots
+are recycled.  What a "step" means belongs to the ModelBackend
+(runtime/backends.py): one decoded token per active slot for transformers,
+one whole feed-forward inference per active slot for VIKIN KAN/MLP stacks.
+This is the vLLM-style execution contract scaled down to what one process
+can test: slot reuse, padding correctness, per-request determinism (batched
+output == single-request output, test-pinned).
+
+The engine also aggregates the backend's per-batch simulated-hardware
+reports (VIKIN cycles / latency / mode switches) into ``stats`` alongside
+wall-clock, so serving throughput can be read in both clocks.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
-from repro.models import transformer as T
+from repro.runtime.backends import (      # noqa: F401  (Request re-export)
+    ModelBackend,
+    Request,
+    TransformerBackend,
+)
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (S,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class Server:
-    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+class Engine:
+    def __init__(self, backend: ModelBackend, *, n_slots: int = 4,
                  max_len: int = 256):
-        self.cfg, self.params = cfg, params
+        self.backend = backend
         self.n_slots, self.max_len = n_slots, max_len
-        self.caches = T.init_caches(cfg, n_slots, max_len)
+        self.state = backend.init_state(n_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self._queue: List[Request] = []
+        self._requests: Dict[int, Request] = {}
         self._next_rid = 0
-
-        self._decode = jax.jit(
-            lambda p, tok, c: T.decode_step(p, cfg, tok, c))
-        # prefill is jitted per prompt-length bucket (padded to 16)
-        self._prefill_cache = {}
+        self.stats: Dict[str, float] = {
+            "ticks": 0, "served": 0, "wall_s": 0.0, "sim_cycles": 0.0,
+            "sim_latency_s": 0.0, "mode_switches": 0.0,
+            "reconfig_cycles": 0.0,
+        }
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> int:
-        req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id)
+        req = Request(self._next_rid, np.asarray(prompt), max_new_tokens,
+                      eos_id)
+        self.backend.validate(req)     # reject bad payloads before queueing
         self._next_rid += 1
         self._queue.append(req)
+        self._requests[req.rid] = req
         return req.rid
 
-    def _prefill_fn(self, length: int):
-        """jit per exact prompt length: no padding, so slot caches carry the
-        true per-request position (the per-row cache 'len')."""
-        if length not in self._prefill_cache:
-            cfg = self.cfg
-
-            def fn(params, tokens):
-                return T.prefill(params, cfg, tokens,
-                                 max_len=self.max_len)
-
-            self._prefill_cache[length] = jax.jit(fn)
-        return self._prefill_cache[length]
-
-    def _write_slot(self, slot: int, req: Request):
-        """Prefill one request and splice its (batch=1) cache into lane
-        ``slot`` of the server's (batch=n_slots) caches."""
-        tokens = req.prompt[None, :]
-        logits, cache = self._prefill_fn(len(req.prompt))(
-            self.params, jnp.asarray(tokens))
-        next_tok = int(jax.device_get(T.greedy_token(logits))[0, 0])
-        req.generated.append(next_tok)
-
-        def put(full, new):
-            # find the batch dim: the dim where full is n_slots-wide and the
-            # fresh cache is 1-wide (dim 0 for plain, dim 1 under the layer
-            # stack).  Everything else (shapes) matches by construction.
-            for d in range(min(2, full.ndim)):
-                if (full.shape[d] == self.n_slots and d < new.ndim
-                        and new.shape[d] == 1):
-                    sl = tuple([slice(None)] * d + [slice(slot, slot + 1)])
-                    return full.at[sl].set(new.astype(full.dtype))
-            return full
-
-        self.caches = jax.tree.map(put, self.caches, cache)
-        self.slot_req[slot] = req
-
-    # ------------------------------------------------------------------
     def _admit(self):
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None and self._queue:
-                self._write_slot(slot, self._queue.pop(0))
+                req = self._queue.pop(0)
+                self.state = self.backend.prefill(self.state, slot, req)
+                self.slot_req[slot] = req
 
     def tick(self):
-        """One engine iteration: admit requests, decode one token for all
-        active slots."""
+        """One engine iteration: admit requests, run one batched step for
+        all active slots, recycle finished slots."""
         self._admit()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
-        toks = np.zeros((self.n_slots, 1), np.int32)
+        self.state = self.backend.step(self.state, self.slot_req)
+        self.stats["ticks"] += 1
+        rep = self.backend.batch_report(len(active))
+        if rep is not None:
+            for k, v in rep.items():
+                self.stats[k] = self.stats.get(k, 0.0) + v
         for s in active:
-            toks[s, 0] = self.slot_req[s].generated[-1]
-        logits, self.caches = self._decode(self.params, jnp.asarray(toks),
-                                           self.caches)
-        nxt = np.asarray(jax.device_get(T.greedy_token(logits)))
-        for s in active:
-            req = self.slot_req[s]
-            tok = int(nxt[s, 0])
-            req.generated.append(tok)
-            if (len(req.generated) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)):
-                req.done = True
+            if self.slot_req[s].done:
+                self.stats["served"] += 1
                 self.slot_req[s] = None
 
-    def run_until_done(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
-        out: Dict[int, List[int]] = {}
-        pending = {r.rid: r for r in self._queue}
+    def run_until_done(self, max_ticks: int = 1000) -> Dict[int, list]:
+        """Drive ticks until queue and slots drain; returns {rid: result}
+        (token lists for autoregressive backends, output arrays for
+        one-shot backends) for every request not returned by an earlier
+        call -- each request is handed back exactly once, so a long-lived
+        engine does not accumulate historical results."""
+        snapshot = dict(self._requests)
+        t0 = time.perf_counter()
         for _ in range(max_ticks):
             self.tick()
             busy = any(r is not None for r in self.slot_req)
             if not busy and not self._queue:
                 break
-        for rid, r in pending.items():
-            out[rid] = r.generated
+        self.stats["wall_s"] += time.perf_counter() - t0
+        for rid in snapshot:
+            del self._requests[rid]
+        return {rid: r.result() for rid, r in snapshot.items()}
+
+    def throughput(self) -> Dict[str, float]:
+        """Requests/s in both clocks (wall + simulated VIKIN latency)."""
+        served = self.stats["served"]
+        out = {"requests": served}
+        if self.stats["wall_s"] > 0:
+            out["wall_rps"] = served / self.stats["wall_s"]
+        if self.stats["sim_latency_s"] > 0:
+            out["sim_rps"] = served / self.stats["sim_latency_s"]
         return out
+
+
+class Server(Engine):
+    """Back-compat transformer server: Engine over a TransformerBackend."""
+
+    def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256):
+        super().__init__(TransformerBackend(cfg, params), n_slots=n_slots,
+                         max_len=max_len)
+        self.cfg, self.params = cfg, params
+
+    @property
+    def caches(self):
+        return self.state

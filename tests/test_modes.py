@@ -1,0 +1,88 @@
+"""ModePlan unit tests: switch counts + RECONFIG_CYCLES accounting pins.
+
+The host processor's mode schedule (core/modes.ModePlan) and the cycle
+model's reconfiguration charge (core/engine.run_model) are the serving
+contract for mixed KAN/MLP workloads; these tests pin both for alternating,
+homogeneous and single-layer stacks.
+"""
+import pytest
+
+from repro.core.engine import run_model, serving_report, kan_layers, \
+    mlp_layers
+from repro.core.modes import (
+    MODE_FOR_KIND,
+    RECONFIG_CYCLES,
+    ExecMode,
+    LayerKind,
+    ModePlan,
+)
+from repro.core.splines import SplineSpec
+
+S43 = SplineSpec(4, 3)
+K, M = LayerKind.KAN, LayerKind.MLP
+
+
+def test_kind_to_mode_mapping():
+    assert MODE_FOR_KIND[LayerKind.KAN] is ExecMode.PIPELINE
+    assert MODE_FOR_KIND[LayerKind.MLP] is ExecMode.PARALLEL
+
+
+@pytest.mark.parametrize("kinds,switches", [
+    ([K, M, K, M], 3),            # alternating: flip at every boundary
+    ([M, K, M, K, M], 4),
+    ([K, K, K, K], 0),            # homogeneous
+    ([M, M], 0),
+    ([K], 0),                     # single layer: nothing to flip
+    ([M], 0),
+    ([K, K, M, M, K], 2),
+])
+def test_switch_counts(kinds, switches):
+    plan = ModePlan.for_layers(kinds)
+    assert plan.n_switches == switches
+    assert plan.reconfig_cycles == switches * RECONFIG_CYCLES
+
+
+def test_segments_run_length_encoding():
+    plan = ModePlan.for_layers([K, K, M, K])
+    assert plan.segments() == [(ExecMode.PIPELINE, 2),
+                               (ExecMode.PARALLEL, 1),
+                               (ExecMode.PIPELINE, 1)]
+    s = plan.summary()
+    assert s["n_switches"] == 2
+    assert s["reconfig_cycles"] == 2 * RECONFIG_CYCLES
+    assert s["segments"] == [("pipeline", 2), ("parallel", 1),
+                             ("pipeline", 1)]
+
+
+@pytest.mark.parametrize("layers,switches", [
+    (mlp_layers([72, 304]) + kan_layers([304, 96], S43), 1),   # one flip
+    (kan_layers([72, 32, 96], S43), 0),                        # homogeneous
+    (kan_layers([72, 96], S43), 0),                            # single layer
+    (mlp_layers([72, 304]) + kan_layers([304, 32], S43)
+     + mlp_layers([32, 96]), 2),                               # alternating
+])
+def test_run_model_charges_exactly_the_plan(layers, switches):
+    """run_model's total minus the per-layer totals IS the reconfiguration
+    charge -- pins the RECONFIG_CYCLES accounting in core/engine.py."""
+    rep = run_model(layers)
+    per_layer = sum(lc.total for lc in rep.per_layer)
+    assert rep.cycles - per_layer == pytest.approx(
+        switches * RECONFIG_CYCLES)
+
+
+def test_reconfig_charge_scales_with_batch():
+    layers = mlp_layers([72, 304]) + kan_layers([304, 96], S43)
+    r1, r4 = run_model(layers, batch=1), run_model(layers, batch=4)
+    per_layer = sum(lc.total for lc in r1.per_layer)
+    assert r4.cycles == pytest.approx(4 * (per_layer + RECONFIG_CYCLES))
+
+
+def test_serving_report_attribution():
+    layers = mlp_layers([72, 304]) + kan_layers([304, 96], S43)
+    rep1 = serving_report(layers, batch=1)
+    rep3 = serving_report(layers, batch=3)
+    assert rep3["sim_cycles"] == pytest.approx(3 * rep1["sim_cycles"])
+    assert rep3["mode_switches"] == 3
+    assert rep3["reconfig_cycles"] == 3 * RECONFIG_CYCLES
+    # per-request attribution is batch-size independent (sequential stream)
+    assert rep3["sim_cycles"] / 3 == pytest.approx(rep1["sim_cycles"])

@@ -138,3 +138,111 @@ def test_server_slot_reuse():
     r2 = srv.submit(np.array([9, 8, 7], np.int32), max_new_tokens=3)
     out = srv.run_until_done()
     assert len(out[r1]) == 3 and len(out[r2]) == 3
+
+
+# ---------------------------------------------------------------------------
+# VIKIN backend (stacked KAN/MLP feed-forward serving)
+# ---------------------------------------------------------------------------
+
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.models.ffn import vikin_stack_apply, vikin_stack_init
+from repro.runtime.backends import VikinBackend
+from repro.runtime.server import Engine
+
+
+def _vikin_engine(arch="vikin-small", n_slots=4, seed=0, impl="auto"):
+    model = VIKIN_ARCHS[arch]
+    params = vikin_stack_init(jax.random.key(seed), model)
+    return model, params, Engine(VikinBackend(model, params, impl=impl),
+                                 n_slots=n_slots)
+
+
+def _feature_burst(model, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.random(model.sizes[0], dtype=np.float32) for _ in range(n)]
+
+
+def test_vikin_batched_equals_single_bitwise():
+    """Serving N mixed KAN/MLP requests across slots must be BITWISE
+    identical to one-at-a-time execution (zero-padded shape buckets +
+    row-independent contractions; min_bucket=2 avoids XLA's gemv path)."""
+    model, params, eng = _vikin_engine("vikin-mixed", n_slots=4)
+    prompts = _feature_burst(model, 6)
+    rids = [eng.submit(p) for p in prompts]
+    batched = eng.run_until_done()
+
+    _, _, solo_eng = _vikin_engine("vikin-mixed", n_slots=4)
+    for p, rid in zip(prompts, rids):
+        srid = solo_eng.submit(p)
+        solo = solo_eng.run_until_done()
+        assert np.array_equal(batched[rid], solo[srid]), (
+            f"batched != single for request {rid}")
+
+
+def test_vikin_slot_reuse_and_completion():
+    model, params, eng = _vikin_engine(n_slots=2)
+    rids = [eng.submit(p) for p in _feature_burst(model, 5)]
+    out = eng.run_until_done()
+    assert sorted(out) == sorted(rids)
+    assert all(out[r].shape == (model.sizes[-1],) for r in rids)
+    assert eng.stats["served"] == 5
+    assert eng.stats["ticks"] == 3          # 2 + 2 + 1 across 2 slots
+
+
+def test_vikin_stats_report_simulated_cycles_and_modes():
+    model, params, eng = _vikin_engine("vikin-small", n_slots=4)
+    for p in _feature_burst(model, 4):
+        eng.submit(p)
+    eng.run_until_done()
+    s = eng.stats
+    assert s["sim_cycles"] > 0 and s["sim_latency_s"] > 0
+    # vikin-small is mlp->kan: one mode switch per served instance
+    assert s["mode_switches"] == 4
+    assert s["reconfig_cycles"] == 4 * 8
+    tp = eng.throughput()
+    assert tp["requests"] == 4 and tp["sim_rps"] > 0
+
+
+def test_vikin_step_matches_direct_stack_apply():
+    """The engine's output is the plain stack forward on the same bucket."""
+    model, params, eng = _vikin_engine("vikin-small", n_slots=2)
+    prompts = _feature_burst(model, 2)
+    rids = [eng.submit(p) for p in prompts]
+    out = eng.run_until_done()
+    direct = np.asarray(vikin_stack_apply(
+        params, jnp.asarray(np.stack(prompts)), model))
+    for j, rid in enumerate(rids):
+        np.testing.assert_array_equal(out[rid], direct[j])
+
+
+def test_vikin_results_returned_exactly_once():
+    """Successive run_until_done calls hand each request back once (no
+    unbounded result accumulation in a long-lived engine)."""
+    model, params, eng = _vikin_engine(n_slots=2)
+    first = [eng.submit(p) for p in _feature_burst(model, 2, seed=1)]
+    out1 = eng.run_until_done()
+    assert sorted(out1) == sorted(first)
+    second = [eng.submit(p) for p in _feature_burst(model, 2, seed=2)]
+    out2 = eng.run_until_done()
+    assert sorted(out2) == sorted(second)       # no historical results
+    assert eng.stats["served"] == 4
+
+
+def test_vikin_rejects_wrong_feature_width_at_submit():
+    """Bad payloads are rejected before queueing, so a malformed request
+    can never abort a run mid-flight and drop admitted work."""
+    model, params, eng = _vikin_engine()
+    good = eng.submit(np.zeros(model.sizes[0], np.float32))
+    with pytest.raises(ValueError, match="features"):
+        eng.submit(np.zeros(model.sizes[0] + 1, np.float32))
+    out = eng.run_until_done()          # the good request still completes
+    assert out[good].shape == (model.sizes[-1],)
+
+
+def test_vikin_bucket_quantization():
+    model, params, eng = _vikin_engine(n_slots=8)
+    b = eng.backend
+    assert [b.bucket(n) for n in (1, 2, 3, 4, 5, 8)] == [2, 2, 4, 4, 8, 8]
+    # non-pow2 slot counts still serve pow2 buckets (determinism regime)
+    _, _, eng3 = _vikin_engine(n_slots=3)
+    assert [eng3.backend.bucket(n) for n in (1, 2, 3)] == [2, 2, 4]

@@ -1,0 +1,120 @@
+"""Property tests for core/sparsity.PatternMask (tiled + grouped flavours).
+
+Pins the stage-2 mask invariants the serving stack and the fused kernels
+rely on: partial trailing groups are always fully kept, keep-fractions stay
+inside the m-of-4 bounds, and static compaction round-trips against the
+dense (multiplicative) mask semantics.  Skips cleanly without hypothesis
+via tests/_hypothesis_fallback.py.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import HAVE_HYPOTHESIS, hypothesis, st
+from repro.core.sparsity import (
+    GROUP,
+    PatternMask,
+    magnitude_mask,
+    sparsity_to_pattern,
+    tiled_mask,
+)
+
+PATTERNS = [(1, 1, 1, 1), (1, 1, 1, 0), (1, 0, 1, 0), (1, 0, 0, 0),
+            (0, 1, 0, 1), (0, 0, 1, 1)]
+
+if HAVE_HYPOTHESIS:
+    hyp_settings = hypothesis.settings(max_examples=60, deadline=None)
+else:  # the fallback stub's settings() is a pass-through decorator
+    hyp_settings = hypothesis.settings()
+
+
+@hyp_settings
+@hypothesis.given(n=st.integers(min_value=1, max_value=97),
+                  pattern=st.sampled_from(PATTERNS))
+def test_tiled_partial_trailing_group_fully_kept(n, pattern):
+    m = tiled_mask(n, pattern)
+    tail = n % GROUP
+    if tail:
+        assert m.keep[n - tail:].all(), "partial trailing group must be kept"
+    # full groups are exact tiles of the pattern
+    full = (n // GROUP) * GROUP
+    if full:
+        g = m.keep[:full].reshape(-1, GROUP)
+        assert (g == np.asarray(pattern, bool)).all()
+
+
+@hyp_settings
+@hypothesis.given(n=st.integers(min_value=1, max_value=97),
+                  pattern=st.sampled_from(PATTERNS))
+def test_tiled_keep_fraction_bounds(n, pattern):
+    m = tiled_mask(n, pattern)
+    n_groups, tail = n // GROUP, n % GROUP
+    expected = n_groups * sum(pattern) + tail
+    assert m.n_keep == expected
+    assert 0.0 <= m.sparsity < 1.0 or (m.sparsity == 0.0 and m.n_keep == n)
+    # keep fraction never drops below the pattern's m-of-4 ratio
+    assert m.n_keep >= n * sum(pattern) / GROUP - 1e-9
+
+
+@hyp_settings
+@hypothesis.given(n=st.integers(min_value=1, max_value=97),
+                  keep_per_group=st.integers(min_value=1, max_value=4),
+                  seed=st.integers(min_value=0, max_value=999))
+def test_grouped_mask_keeps_m_of_4(n, keep_per_group, seed):
+    rng = np.random.default_rng(seed)
+    sal = rng.normal(size=n)
+    m = magnitude_mask(sal, keep_per_group)
+    full, tail = (n // GROUP) * GROUP, n % GROUP
+    if full:
+        per_group = m.keep[:full].reshape(-1, GROUP).sum(axis=1)
+        assert (per_group == keep_per_group).all()
+        # kept entries dominate dropped ones inside every group
+        g = sal[:full].reshape(-1, GROUP)
+        k = m.keep[:full].reshape(-1, GROUP)
+        for row_s, row_k in zip(g, k):
+            if 0 < keep_per_group < GROUP:
+                assert row_s[row_k].min() >= row_s[~row_k].max()
+    if tail:
+        assert m.keep[full:].all()
+
+
+@hyp_settings
+@hypothesis.given(n=st.integers(min_value=1, max_value=97),
+                  pattern=st.sampled_from(PATTERNS),
+                  seed=st.integers(min_value=0, max_value=999))
+def test_compaction_round_trips_against_dense_mask(n, pattern, seed):
+    """gather(indices) then scatter-back == multiply-by-dense-mask."""
+    m = tiled_mask(n, pattern)
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(n, 5)).astype(np.float32)
+    idx = m.indices()
+    assert idx.shape[0] == m.n_keep
+    assert (np.diff(idx) > 0).all()              # sorted, unique
+    compact = w[idx]
+    back = np.zeros_like(w)
+    back[idx] = compact
+    np.testing.assert_array_equal(back, w * m.keep[:, None])
+
+
+@hyp_settings
+@hypothesis.given(n=st.integers(min_value=GROUP, max_value=97),
+                  pattern=st.sampled_from(PATTERNS))
+def test_is_tiled_recovers_pattern(n, pattern):
+    m = tiled_mask(n, pattern)
+    got = m.is_tiled()
+    assert got is not None
+    np.testing.assert_array_equal(got, np.asarray(pattern, bool))
+
+
+def test_is_tiled_rejects_non_tiled():
+    keep = np.asarray([1, 0, 1, 0, 0, 1, 0, 1], bool)   # two different groups
+    assert PatternMask(keep).is_tiled() is None
+
+
+def test_sparsity_to_pattern_table():
+    assert sparsity_to_pattern(0.0) == (1, 1, 1, 1)
+    assert sparsity_to_pattern(0.5) == (1, 0, 1, 0)
+    for rate in (0.0, 0.25, 0.5, 0.75):
+        pat = sparsity_to_pattern(rate)
+        assert sum(pat) == round(GROUP * (1 - rate))
+    with pytest.raises(ValueError):
+        sparsity_to_pattern(0.3)
