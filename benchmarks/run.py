@@ -81,7 +81,8 @@ def main() -> None:
     # serving throughput: the VIKIN backend under a request burst
     # (wall-clock + simulated cycles; artifact -> BENCH_serving.json)
     from benchmarks import serving_bench
-    sv = serving_bench.run(n_requests=16 if args.fast else 32)
+    sv = serving_bench.run(n_requests=16 if args.fast else 32,
+                           train_steps=60 if args.fast else 150)
     for arch in ("vikin-kan2", "vikin-mixed"):
         r = sv[arch]
         rows.append((
@@ -90,6 +91,15 @@ def main() -> None:
             f"wall_rps={r['wall_rps']:.1f};"
             f"sim_cycles_per_req={r['sim_cycles_per_req']:.0f};"
             f"switches={r['mode_switches']}"))
+    for key, r in sv.items():
+        # trained dense-vs-sparse pipeline row (DESIGN.md Sec. 12)
+        if key.startswith("trained:"):
+            rows.append((
+                f"pipeline_{r['arch'].replace('-', '_')}",
+                r["cycle_speedup"],
+                f"mse_ratio={r['mse_ratio']:.4f};"
+                f"dense_cyc={r['dense']['sim_cycles_per_req']:.0f};"
+                f"sparse_cyc={r['sparse']['sim_cycles_per_req']:.0f}"))
 
     # roofline summary (requires dry-run artifacts; skipped if absent)
     try:

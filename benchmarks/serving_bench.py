@@ -5,6 +5,11 @@ Drives the continuous-batching engine (runtime/server.Engine) over the
 simulated VIKIN figures (cycles, latency, mode switches) -- the serving-path
 analogue of the per-kernel BENCH_kernels.json trajectory.
 
+It also emits a ``trained:*`` row (train -> calibrate -> serve, DESIGN.md
+Sec. 12): the same trained stack served dense and two-stage-sparsified, with
+served-output accuracy and simulated cycles side by side -- the paper's
+"speedup at small accuracy loss" claim measured through the engine.
+
 Usage: PYTHONPATH=src python -m benchmarks.serving_bench [--requests N]
 """
 from __future__ import annotations
@@ -63,10 +68,74 @@ def serve_burst(arch: str, *, n_requests: int = 32, n_slots: int = 8,
     }
 
 
+def _served_mse(model, params, masks, val_x, val_y, *, n_slots: int,
+                impl: str) -> Dict[str, float]:
+    """Accuracy measured THROUGH the serving path: submit the val set as
+    requests, compare engine outputs against targets (the served-accuracy
+    protocol of DESIGN.md Sec. 12)."""
+    backend = VikinBackend(model, params, impl=impl, masks=masks)
+    eng = Engine(backend, n_slots=n_slots)
+    rids = [eng.submit(val_x[i]) for i in range(val_x.shape[0])]
+    out = eng.run_until_done()
+    pred = np.stack([out[r] for r in rids])
+    s = eng.stats
+    return {
+        "val_mse": float(np.mean((pred - val_y) ** 2)),
+        "sim_cycles_per_req": s["sim_cycles"] / max(s["served"], 1),
+    }
+
+
+def trained_dense_vs_sparse(arch: str = "vikin-mlp3", *, steps: int = 150,
+                            n_val: int = 64, n_slots: int = 8,
+                            impl: str = "jnp", seed: int = 0) -> Dict:
+    """Train -> calibrate -> serve the same stack dense and sparsified.
+
+    The row this emits is the benchmark analogue of the paper's headline
+    (cycle speedup at small accuracy loss), measured end to end through the
+    engine rather than on random-init weights.
+    """
+    import dataclasses
+
+    from repro.core.calibrate import calibrate_stack, keep_per_group_for_rate
+    from repro.data.stack_task import task_for_model
+    from repro.runtime.trainer import StackTrainer, StackTrainerConfig
+
+    model = VIKIN_ARCHS[arch]
+    rate = model.pattern_rate or 0.5
+    data = task_for_model(model, seed=seed)
+    trainer = StackTrainer(model, data, StackTrainerConfig(
+        steps=steps, batch_size=64, impl=impl, seed=seed,
+        log_every=max(1, steps)))
+    trained = trainer.run()
+    sp = calibrate_stack(trained["params"], model, data["train_x"][:256],
+                         keep_per_group=keep_per_group_for_rate(rate),
+                         impl=impl)
+    dense_model = dataclasses.replace(model, pattern_rate=0.0)
+    val_x = data["val_x"][:n_val]
+    val_y = data["val_y"][:n_val]
+    dense = _served_mse(dense_model, trained["params"], None, val_x, val_y,
+                        n_slots=n_slots, impl=impl)
+    sparse = _served_mse(dense_model, trained["params"], list(sp.masks),
+                         val_x, val_y, n_slots=n_slots, impl=impl)
+    return {
+        "arch": arch, "task": data["task"], "train_steps": steps,
+        "pattern_rate": rate,
+        "mask_keep_rates": sp.summary()["keep_rates"],
+        "dense": dense, "sparse": sparse,
+        "cycle_speedup": (dense["sim_cycles_per_req"]
+                          / max(sparse["sim_cycles_per_req"], 1e-9)),
+        "mse_ratio": sparse["val_mse"] / max(dense["val_mse"], 1e-12),
+    }
+
+
 def run(n_requests: int = 32, n_slots: int = 8,
-        archs=("vikin-kan2", "vikin-mlp3", "vikin-mixed")) -> Dict[str, Dict]:
+        archs=("vikin-kan2", "vikin-mlp3", "vikin-mixed"),
+        trained: bool = True, train_steps: int = 150) -> Dict[str, Dict]:
     results = {a: serve_burst(a, n_requests=n_requests, n_slots=n_slots)
                for a in archs}
+    if trained:
+        row = trained_dense_vs_sparse(steps=train_steps, n_slots=n_slots)
+        results[f"trained:{row['arch']}"] = row
     with open(ARTIFACT, "w") as f:
         json.dump(results, f, indent=1)
     return results
@@ -76,10 +145,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--no-trained", action="store_true",
+                    help="skip the trained dense-vs-sparse comparison row")
     args = ap.parse_args()
-    results = run(n_requests=args.requests, n_slots=args.slots)
+    results = run(n_requests=args.requests, n_slots=args.slots,
+                  trained=not args.no_trained, train_steps=args.train_steps)
     print("arch,requests,wall_rps,sim_cycles_per_req,sim_rps,mode_switches")
     for a, r in results.items():
+        if a.startswith("trained:"):
+            print(f"{a}: dense mse {r['dense']['val_mse']:.5f} / "
+                  f"{r['dense']['sim_cycles_per_req']:.0f} cyc -> sparse "
+                  f"mse {r['sparse']['val_mse']:.5f} / "
+                  f"{r['sparse']['sim_cycles_per_req']:.0f} cyc "
+                  f"({r['cycle_speedup']:.2f}x cycles, "
+                  f"{r['mse_ratio']:.3f}x mse)")
+            continue
         print(f"{a},{r['requests']},{r['wall_rps']:.1f},"
               f"{r['sim_cycles_per_req']:.0f},{r['sim_rps']:.0f},"
               f"{r['mode_switches']}")

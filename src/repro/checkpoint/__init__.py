@@ -1,10 +1,13 @@
 from repro.checkpoint.checkpoint import (
     AsyncCheckpointer,
+    CheckpointMismatchError,
     all_steps,
     latest_step,
     restore_checkpoint,
+    restore_masks,
     save_checkpoint,
 )
 
-__all__ = ["AsyncCheckpointer", "all_steps", "latest_step",
-           "restore_checkpoint", "save_checkpoint"]
+__all__ = ["AsyncCheckpointer", "CheckpointMismatchError", "all_steps",
+           "latest_step", "restore_checkpoint", "restore_masks",
+           "save_checkpoint"]

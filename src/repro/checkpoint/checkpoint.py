@@ -17,6 +17,11 @@ Design points for 1000+-node runs:
     per-shard files; the gather/re-shard contract is what the tests pin down.
   * **Retention** -- keep the newest ``keep`` checkpoints, delete the rest
     (after commit, never before).
+  * **Sparsity masks** -- sparsified VIKIN stacks carry one static
+    PatternMask per layer (core/calibrate); ``save_checkpoint(masks=...)``
+    serializes the raw bool keep arrays into ``masks.npz`` next to the
+    params and ``restore_masks`` rebuilds them bit-exact, so a served model
+    runs exactly the masks it was calibrated with (DESIGN.md Sec. 12).
 """
 from __future__ import annotations
 
@@ -25,7 +30,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -33,6 +38,11 @@ import numpy as np
 PyTree = Any
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_MASK_FILE = "masks.npz"
+
+
+class CheckpointMismatchError(ValueError):
+    """A checkpoint does not fit the restore target's tree structure."""
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
@@ -42,19 +52,39 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def _unflatten_into(target: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+def _unflatten_into(target: PyTree, flat: Dict[str, np.ndarray],
+                    ctx: str = "checkpoint") -> PyTree:
+    """Rebuild ``target``'s structure from ``flat``; every incompatibility
+    (missing / unexpected leaves, shape mismatches) is collected and raised
+    as ONE CheckpointMismatchError naming each offending key."""
     paths, treedef = jax.tree_util.tree_flatten_with_path(target)
-    leaves = []
+    target_keys = {jax.tree_util.keystr(path) for path, _ in paths}
+    problems: List[str] = []
     for path, leaf in paths:
         key = jax.tree_util.keystr(path)
         if key not in flat:
-            raise KeyError(f"checkpoint missing leaf {key}")
-        arr = flat[key]
-        if tuple(arr.shape) != tuple(leaf.shape):
-            raise ValueError(
-                f"shape mismatch for {key}: ckpt {arr.shape} vs "
-                f"target {leaf.shape}")
-        leaves.append(arr.astype(leaf.dtype))
+            problems.append(f"missing leaf {key} "
+                            f"(target wants shape {tuple(leaf.shape)})")
+        elif tuple(flat[key].shape) != tuple(leaf.shape):
+            problems.append(
+                f"shape mismatch at {key}: checkpoint has "
+                f"{tuple(flat[key].shape)}, target wants "
+                f"{tuple(leaf.shape)}")
+    if problems:
+        # extra checkpoint-only leaves are legal (partial restore, e.g.
+        # params out of a full train state) but worth naming when the
+        # restore already failed -- they are usually the "did you mean".
+        extras = sorted(k for k in flat if k not in target_keys)
+        if extras:
+            problems.append(
+                "checkpoint-only leaves (fine on their own, listed for "
+                "diagnosis): " + ", ".join(extras[:8])
+                + (" ..." if len(extras) > 8 else ""))
+        raise CheckpointMismatchError(
+            f"{ctx} does not match the restore target "
+            f"({len(problems)} problem(s)):\n  " + "\n  ".join(problems))
+    leaves = [flat[jax.tree_util.keystr(path)].astype(leaf.dtype)
+              for path, leaf in paths]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -65,8 +95,14 @@ def save_checkpoint(
     *,
     extra: Optional[Dict[str, Any]] = None,
     keep: Optional[int] = None,
+    masks: Optional[Sequence[Any]] = None,
 ) -> str:
-    """Atomically write ``tree`` (+ json-serializable ``extra``) at ``step``."""
+    """Atomically write ``tree`` (+ json-serializable ``extra``) at ``step``.
+
+    ``masks``: optional per-layer sparsity masks (core/sparsity.PatternMask
+    or None entries); their bool keep arrays land in ``masks.npz`` inside
+    the same atomic commit, restored bit-exact by ``restore_masks``.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f".tmp.{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -84,6 +120,14 @@ def save_checkpoint(
         "extra": extra or {},
         "format": 1,
     }
+    if masks is not None:
+        mask_arrays = {f"mask_{i}": np.asarray(m.keep, np.bool_)
+                       for i, m in enumerate(masks) if m is not None}
+        np.savez(os.path.join(tmp, _MASK_FILE), **mask_arrays)
+        manifest["masks"] = {
+            "n_layers": len(masks),
+            "present": [i for i, m in enumerate(masks) if m is not None],
+        }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
 
@@ -138,7 +182,7 @@ def restore_checkpoint(
         manifest = json.load(f)
     with np.load(os.path.join(d, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
-    tree = _unflatten_into(target, flat)
+    tree = _unflatten_into(target, flat, ctx=f"checkpoint {d}")
     if shardings is not None:
         if isinstance(shardings, jax.sharding.Sharding):
             tree = jax.tree.map(
@@ -146,6 +190,33 @@ def restore_checkpoint(
         else:
             tree = jax.tree.map(jax.device_put, tree, shardings)
     return tree, step, manifest.get("extra", {})
+
+
+def restore_masks(ckpt_dir: str, *, step: Optional[int] = None
+                  ) -> Optional[List[Any]]:
+    """Rebuild the per-layer PatternMask list saved with ``masks=...``.
+
+    Returns None when the checkpoint carries no masks (a dense model);
+    otherwise a list with one Optional[PatternMask] per layer whose keep
+    arrays are bit-exact copies of what was saved.
+    """
+    from repro.core.sparsity import PatternMask
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest.get("masks")
+    if meta is None:
+        return None
+    masks: List[Any] = [None] * int(meta["n_layers"])
+    with np.load(os.path.join(d, _MASK_FILE)) as z:
+        for i in meta["present"]:
+            masks[i] = PatternMask(np.asarray(z[f"mask_{i}"], np.bool_))
+    return masks
 
 
 class AsyncCheckpointer:

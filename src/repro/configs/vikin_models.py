@@ -69,13 +69,17 @@ class PaperModelConfig:
                 n += a * b * (1 + self.spec.n_bases)
         return n
 
-    def layer_works(self, nnz_rates: Optional[Sequence[float]] = None):
+    def layer_works(self, nnz_rates: Optional[Sequence[float]] = None,
+                    pattern_rates: Optional[Sequence[float]] = None):
         """Per-layer LayerWork entries for the cycle model (core/engine).
 
         ``nnz_rates[i]`` is the measured input-activation density of layer i
-        (MLP zero-skip); defaults to dense.  The stage-2 pattern rate
-        applies to hidden layers only -- the raw feature input is never
-        masked, matching the serving stack's forward.
+        (MLP zero-skip); defaults to dense.  ``pattern_rates[i]`` overrides
+        the config-level stage-2 rate with a *measured* per-layer mask
+        sparsity (calibrated models, core/calibrate.masked_pattern_rates).
+        Without an override, the config rate applies to hidden layers only
+        -- the raw feature input is never masked, matching the serving
+        stack's forward.
         """
         from repro.core.engine import LayerWork
 
@@ -83,11 +87,14 @@ class PaperModelConfig:
         out = []
         for i, (kind, a, b) in enumerate(
                 zip(self.layer_kinds, self.sizes, self.sizes[1:])):
+            if pattern_rates is not None:
+                pr = float(pattern_rates[i])
+            else:
+                pr = self.pattern_rate if (kind == "kan" or i > 0) else 0.0
             if kind == "kan":
                 out.append(LayerWork(LayerKind.KAN, a, b, spec=self.spec,
-                                     pattern_rate=self.pattern_rate))
+                                     pattern_rate=pr))
             else:
-                pr = self.pattern_rate if i > 0 else 0.0
                 out.append(LayerWork(LayerKind.MLP, a, b,
                                      in_nnz_rate=nnz[i], pattern_rate=pr))
         return out

@@ -1,0 +1,153 @@
+"""Post-training calibration: derive two-stage sparsity masks from a trained
+stack (DESIGN.md Sec. 12).
+
+The kernels consume *static* masks (core/sparsity.PatternMask); this module
+is where those masks come from once a stack has been trained.  Mirroring the
+edge-KAN accelerator practice of deriving hardware sparsity patterns from
+post-training calibration (arXiv:2409.11418, arXiv:2509.05937) rather than
+assuming them:
+
+  * **KAN layers** (stage-1 + stage-2 on the basis dimension): run the
+    calibration batch through the stack and measure the mean |B_i(x)| energy
+    of every basis function over the layer's actual input distribution,
+    weighted by the L1 mass of the spline coefficients that consume it --
+    a Wanda-style ``|activation| x |weight|`` saliency per basis index.
+    ``magnitude_mask`` then keeps the top m-of-4 bases per group.
+  * **MLP layers** (stage-2 on the hidden input dimension): Wanda saliency
+    per input node j = RMS activation of node j over the calibration batch
+    times the fan-out L1 of weight row j (core/sparsity.weight_saliency).
+    Layer 0 is never masked -- raw request features always enter dense,
+    matching the serving stack's forward contract (models/ffn).
+
+The result is a ``StackSparsity``: one Optional[PatternMask] per layer, in
+the exact form ``vikin_stack_apply(..., masks=...)`` and the checkpoint
+mask serializer (checkpoint/checkpoint.py) consume.  Everything here is
+host-side numpy over a fixed calibration batch, so a fixed seed gives
+bit-identical masks (test-pinned: tests/test_pipeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.sparsity import (
+    GROUP,
+    PatternMask,
+    magnitude_mask,
+    weight_saliency,
+)
+from repro.core.splines import bases_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSparsity:
+    """Calibrated per-layer masks for one KAN/MLP stack.
+
+    ``masks[i]`` applies to layer i: over the basis dimension for KAN
+    layers, over the input (hidden) dimension for MLP layers; None = dense.
+    """
+
+    masks: Tuple[Optional[PatternMask], ...]
+
+    def summary(self) -> dict:
+        return {
+            "n_layers": len(self.masks),
+            "keep_rates": [None if m is None else round(1.0 - m.sparsity, 4)
+                           for m in self.masks],
+            "n_keep": [None if m is None else m.n_keep for m in self.masks],
+        }
+
+
+def keep_per_group_for_rate(rate: float) -> int:
+    """Map a pattern-sparsity rate (0/0.25/0.5/0.75) to m-of-4 keeps."""
+    m = round((1.0 - rate) * GROUP)
+    if not 1 <= m <= GROUP or abs((1.0 - m / GROUP) - rate) > 1e-9:
+        raise ValueError(
+            f"pattern rate must be one of 0, 0.25, 0.5, 0.75; got {rate}")
+    return m
+
+
+def stack_activations(params, model, x: np.ndarray, *,
+                      impl: str = "jnp") -> List[np.ndarray]:
+    """Per-layer *input* activations of a dense forward over ``x``.
+
+    Returns [h_0 .. h_{L-1}] where h_i feeds layer i (h_0 = x).  The stack
+    is run dense (pattern_rate forced to 0) because calibration must see
+    the unmasked distribution.
+    """
+    from repro.models.ffn import stack_layer_cfgs
+    from repro.core.kan import kan_apply
+    from repro.kernels.pattern_matmul.ops import pattern_linear
+
+    dense_model = dataclasses.replace(model, pattern_rate=0.0)
+    h = np.asarray(x, np.float32)
+    acts = []
+    for p, (kind, cfg) in zip(params, stack_layer_cfgs(dense_model)):
+        acts.append(np.asarray(h))
+        if kind == "kan":
+            h = np.asarray(jax.device_get(
+                kan_apply(p, jax.numpy.asarray(h),
+                          dataclasses.replace(cfg, impl=impl))))
+        else:
+            h = np.asarray(jax.device_get(pattern_linear(
+                jax.numpy.asarray(h), p["w"], cfg["mask"], p["b"],
+                act=cfg["act"], impl=impl)))
+    return acts
+
+
+def kan_basis_saliency(p, spec, x: np.ndarray) -> np.ndarray:
+    """Wanda-style per-basis saliency: mean |B_i(x)| x L1(t[:, i, :])."""
+    xf = np.asarray(x, np.float32)
+    b = np.asarray(jax.device_get(
+        bases_dense(spec.clip(jax.numpy.asarray(xf)), spec)))
+    act_energy = np.abs(b).mean(axis=(0, 1))                # (n_bases,)
+    t = np.asarray(jax.device_get(p["t"]), np.float32)
+    coeff_mass = np.abs(t).sum(axis=(0, 2))                 # (n_bases,)
+    return act_energy * coeff_mass
+
+
+def mlp_input_saliency(p, x: np.ndarray) -> np.ndarray:
+    """Wanda saliency per input node: RMS activation x fan-out L1."""
+    xf = np.asarray(x, np.float32)
+    act_rms = np.sqrt(np.mean(xf * xf, axis=0))             # (n_in,)
+    w = np.asarray(jax.device_get(p["w"]), np.float32)
+    return act_rms * weight_saliency(w)                     # (n_in,)
+
+
+def calibrate_stack(params, model, calib_x: np.ndarray, *,
+                    keep_per_group: int = 2,
+                    impl: str = "jnp") -> StackSparsity:
+    """Derive the stack's two-stage masks from a trained model.
+
+    ``keep_per_group`` is the m of m-of-4 (2 = the paper's 50% deployment
+    rate, Table II); ``calib_x`` is a representative input batch.
+    """
+    from repro.models.ffn import stack_layer_cfgs
+
+    if not 1 <= keep_per_group <= GROUP:
+        raise ValueError(f"keep_per_group must be in [1, {GROUP}]")
+    dense_model = dataclasses.replace(model, pattern_rate=0.0)
+    acts = stack_activations(params, dense_model, calib_x, impl=impl)
+    masks: List[Optional[PatternMask]] = []
+    for i, (p, (kind, cfg)) in enumerate(
+            zip(params, stack_layer_cfgs(dense_model))):
+        if keep_per_group == GROUP:
+            masks.append(None)
+        elif kind == "kan":
+            sal = kan_basis_saliency(p, cfg.spec, acts[i])
+            masks.append(magnitude_mask(sal, keep_per_group))
+        elif i == 0:
+            masks.append(None)      # raw features are never masked
+        else:
+            sal = mlp_input_saliency(p, acts[i])
+            masks.append(magnitude_mask(sal, keep_per_group))
+    return StackSparsity(tuple(masks))
+
+
+def masked_pattern_rates(masks: Sequence[Optional[PatternMask]]
+                         ) -> List[float]:
+    """Per-layer measured sparsity rates (cycle-model inputs)."""
+    return [0.0 if m is None else float(m.sparsity) for m in masks]

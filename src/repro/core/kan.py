@@ -46,6 +46,9 @@ class KANConfig:
     n_out: int
     spec: SplineSpec = SplineSpec(4, 3)          # paper default: G=4, K=3
     pattern: Optional[Tuple[int, ...]] = None    # tiled 4-bit stage-2 mask
+    # calibrated (grouped, per-group independent) mask: explicit kept basis
+    # indices, e.g. from core/calibrate.  Takes precedence over ``pattern``.
+    basis_keep: Optional[Tuple[int, ...]] = None
     impl: str = "auto"                           # kernel dispatch
     version: int = DEFAULT_VERSION               # fused-kernel generation
     blocks: Optional[Tuple[int, int, int]] = None  # (bm, bi, bn) override;
@@ -53,6 +56,10 @@ class KANConfig:
 
     @property
     def basis_mask(self) -> Optional[PatternMask]:
+        if self.basis_keep is not None:
+            keep = np.zeros(self.spec.n_bases, bool)
+            keep[list(self.basis_keep)] = True
+            return PatternMask(keep)
         if self.pattern is None:
             return None
         return tiled_mask(self.spec.n_bases, self.pattern)

@@ -15,6 +15,10 @@ types with shared kernels, which is the analogue of reusing silicon.
 ``ModePlan.for_layers`` mirrors the host processor's role in the paper: it
 inspects the workload (a sequence of layer kinds) and issues the mode switch
 schedule, charging a reconfiguration overhead whenever the mode flips.
+
+Implements the mode-schedule serving contract of DESIGN.md Sec. 11 (each
+served workload carries its ModePlan; RECONFIG_CYCLES charged per flip per
+served instance) on top of the pipeline/parallel dataflows of Sec. 2 and 7.
 """
 from __future__ import annotations
 

@@ -20,6 +20,10 @@ the TPU analogue of 2:4 structured sparsity.  Masks come in two flavours:
                  kernel can compact its scatter too.
 * ``grouped`` -- independent m-of-4 choice per group (magnitude-based, Wanda
                  style [24]).  Compaction still static, per-group indices.
+
+Implements DESIGN.md Sec. 3 (two-stage sparsity on TPU).  Grouped masks are
+derived post-training by core/calibrate (DESIGN.md Sec. 12) and serialized
+alongside params by checkpoint/checkpoint.py.
 """
 from __future__ import annotations
 

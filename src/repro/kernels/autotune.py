@@ -22,6 +22,11 @@ Cache file: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 Search-on-miss is opt-in (``REPRO_AUTOTUNE=1`` or ``autotune=True`` on the
 ``tune_*`` wrappers): a silent multi-second search in the middle of a serving
 step is worse than a default tile.
+
+Implements DESIGN.md Sec. 9 (cache key/format, candidate pruning, the
+bucketing rationale); the per-kernel block knobs it feeds are defined there
+too.  Tuned tiles reach the serving stack through ``KANConfig.blocks`` /
+``FFNConfig.kan_blocks`` and each kernel's ``impl="auto"`` dispatch.
 """
 from __future__ import annotations
 

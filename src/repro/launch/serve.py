@@ -11,6 +11,14 @@ request, and report simulated VIKIN cycles next to wall-clock:
 
   PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
       --requests 8 --slots 4 --impl pallas_interpret
+
+``--ckpt`` points a vikin arch at a sparsified checkpoint produced by
+``launch/train.py --arch vikin-*`` (params + calibrated two-stage masks,
+DESIGN.md Sec. 12), so served outputs and simulated cycles reflect the
+trained sparse model instead of random-init weights:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
+      --ckpt /tmp/vikin_ckpt --requests 8 --impl pallas_interpret
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ def _serve_vikin(args, model):
     import jax
     import numpy as np
 
+    from repro.checkpoint import restore_checkpoint, restore_masks
     from repro.models.ffn import vikin_stack_init
     from repro.runtime.backends import VikinBackend
     from repro.runtime.server import Engine
@@ -28,7 +37,27 @@ def _serve_vikin(args, model):
     if args.scale == "smoke":
         model = model.reduce()
     params = vikin_stack_init(jax.random.key(0), model)
-    backend = VikinBackend(model, params, impl=args.impl)
+    masks = None
+    # accept --ckpt-dir too: train.py writes through that flag, and serving
+    # random-init weights because the "wrong" spelling was used would be a
+    # silently wrong benchmark
+    ckpt = args.ckpt or args.ckpt_dir
+    if ckpt:
+        # trained + sparsified checkpoint (launch/train.py --arch vikin-*):
+        # params restored into the init tree's structure, masks bit-exact
+        params, step, extra = restore_checkpoint(ckpt, params)
+        masks = restore_masks(ckpt)
+        print(f"restored {model.name} from {ckpt} step {step}")
+        if extra:
+            print(f"  trained on task={extra.get('task')} "
+                  f"pattern_rate={extra.get('pattern_rate')} "
+                  f"val_dense={extra.get('val_dense')} "
+                  f"val_sparse={extra.get('val_sparse')}")
+        if masks is not None:
+            kept = [None if m is None else f"{m.n_keep}/{m.n}"
+                    for m in masks]
+            print(f"  restored per-layer masks (kept): {kept}")
+    backend = VikinBackend(model, params, impl=args.impl, masks=masks)
     eng = Engine(backend, n_slots=args.slots)
 
     plan = backend.plan.summary()
@@ -97,7 +126,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="transformer archs: restore params from here")
+    ap.add_argument("--ckpt", default=None,
+                    help="vikin archs: sparsified checkpoint dir from "
+                         "launch/train.py (params + masks)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)

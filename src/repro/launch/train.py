@@ -9,12 +9,83 @@ instead of executing (see dryrun.py for the full sweep driver).
       --steps 100 --seq 128 --batch 8 --scale smoke
   PYTHONPATH=src python -m repro.launch.train --arch granite-20b \
       --shape train_4k --dry-run
+
+``--arch vikin-*`` instead runs the paper pipeline: train a KAN/MLP stack
+dense, calibrate two-stage sparsity masks post-training, and export a
+sparsified checkpoint (params + masks) that launch/serve.py --ckpt serves
+(DESIGN.md Sec. 12):
+
+  PYTHONPATH=src python -m repro.launch.train --arch vikin-small \
+      --steps 200 --pattern 0.5 --ckpt-dir /tmp/vikin_ckpt
 """
 from __future__ import annotations
 
 import argparse
 import os
 import tempfile
+
+
+def _train_vikin(args, model):
+    """Train -> calibrate -> sparsified checkpoint for a VIKIN stack."""
+    from repro.checkpoint import save_checkpoint
+    from repro.core.calibrate import (
+        calibrate_stack,
+        keep_per_group_for_rate,
+        masked_pattern_rates,
+    )
+    from repro.core.engine import run_model
+    from repro.data.stack_task import task_for_model
+    from repro.runtime.trainer import StackTrainer, StackTrainerConfig
+
+    data = task_for_model(model, classify=(args.loss == "xent"),
+                          seed=args.seed)
+    tcfg = StackTrainerConfig(
+        steps=args.steps, batch_size=args.batch, lr=args.lr,
+        impl=args.impl, loss=args.loss, seed=args.seed,
+        log_every=max(1, args.steps // 5))
+    trainer = StackTrainer(model, data, tcfg)
+    print(f"arch {model.name}: layers={list(model.layer_kinds)} "
+          f"sizes={list(model.sizes)} task={data['task']} "
+          f"({data['train_x'].shape[0]} train samples)")
+    out = trainer.run()
+
+    # post-training calibration at the deployment rate (Table II style):
+    # --pattern overrides; 0 falls back to the arch's configured rate
+    rate = args.pattern if args.pattern > 0 else model.pattern_rate
+    kpg = keep_per_group_for_rate(rate)
+    calib_x = data["train_x"][:args.calib_samples]
+    sp = calibrate_stack(out["params"], model, calib_x,
+                         keep_per_group=kpg, impl=args.impl)
+    # run() already evaluated the final dense params; only sparse is new
+    dense_eval = {k: v for k, v in out.items() if k.startswith("val_")}
+    sparse_eval = trainer.evaluate(masks=sp.masks)
+    rates = masked_pattern_rates(sp.masks)
+    dense_rep = run_model(model.layer_works(
+        pattern_rates=[0.0] * model.n_layers))
+    sparse_rep = run_model(model.layer_works(pattern_rates=rates))
+
+    extra = {
+        "arch": model.name, "task": data["task"], "loss": args.loss,
+        "pattern_rate": rate, "seed": args.seed,
+        "mask_keep_rates": sp.summary()["keep_rates"],
+        "val_dense": dense_eval, "val_sparse": sparse_eval,
+        "sim_cycles_dense": dense_rep.cycles,
+        "sim_cycles_sparse": sparse_rep.cycles,
+    }
+    masks = (sp.masks if any(m is not None for m in sp.masks) else None)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(
+        prefix=f"vikin_{model.name}_")
+    path = save_checkpoint(ckpt_dir, args.steps, out["params"],
+                           extra=extra, masks=masks)
+    speedup = dense_rep.cycles / max(sparse_rep.cycles, 1.0)
+    print(f"calibrated masks at rate {rate}: keep_rates="
+          f"{sp.summary()['keep_rates']}")
+    print(f"val dense {dense_eval} -> sparse {sparse_eval}")
+    print(f"simulated cycles dense {dense_rep.cycles:.0f} -> sparse "
+          f"{sparse_rep.cycles:.0f} ({speedup:.2f}x)")
+    print(f"sparsified checkpoint: {path}")
+    print(f"serve it:  PYTHONPATH=src python -m repro.launch.serve "
+          f"--arch {model.name} --ckpt {ckpt_dir}")
 
 
 def main():
@@ -25,12 +96,32 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default: 3e-4 (transformer) / 1e-2 (vikin stacks)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ffn", default=None)
-    ap.add_argument("--pattern", type=float, default=0.0)
+    ap.add_argument("--pattern", type=float, default=0.0,
+                    help="stage-2 sparsity rate (vikin: calibration rate; "
+                         "0 uses the arch's configured rate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loss", default="mse", choices=["mse", "xent"],
+                    help="vikin stack task: regression | classification")
+    ap.add_argument("--impl", default="jnp",
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"],
+                    help="kernel dispatch for vikin-* training")
+    ap.add_argument("--calib-samples", type=int, default=256,
+                    help="calibration batch size for mask derivation")
     ap.add_argument("--dry-run", action="store_true")
     args = ap.parse_args()
+
+    from repro.configs.vikin_models import VIKIN_ARCHS
+
+    if args.arch in VIKIN_ARCHS:
+        if args.lr is None:
+            args.lr = 1e-2
+        return _train_vikin(args, VIKIN_ARCHS[args.arch])
+    if args.lr is None:
+        args.lr = 3e-4
 
     if args.dry_run:
         # re-exec through dryrun so XLA_FLAGS is set before jax imports

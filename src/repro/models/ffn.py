@@ -159,20 +159,40 @@ def ffn_apply(params: Dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def stack_layer_cfgs(model) -> list:
-    """Per-layer lowering descriptors: ("kan", KANConfig) or ("mlp", dict)."""
+def stack_layer_cfgs(model, masks=None) -> list:
+    """Per-layer lowering descriptors: ("kan", KANConfig) or ("mlp", dict).
+
+    ``masks`` (optional, one Optional[PatternMask] per layer -- e.g. a
+    calibrated core/calibrate.StackSparsity.masks) overrides the tiled
+    masks derived from ``model.pattern_rate``: KAN layers take the mask
+    over the basis dimension (as explicit kept indices), MLP layers over
+    their input dimension.  A None entry leaves that layer dense.
+    """
     spec = model.spec
     pat = (sparsity_to_pattern(model.pattern_rate)
            if model.pattern_rate > 0 else None)
+    if masks is not None and len(masks) != len(model.sizes) - 1:
+        raise ValueError(
+            f"masks has {len(masks)} entries for "
+            f"{len(model.sizes) - 1} layers")
     out = []
     for i, (kind, a, b) in enumerate(
             zip(model.layer_kinds, model.sizes, model.sizes[1:])):
         last = i == len(model.sizes) - 2
+        override = masks[i] if masks is not None else None
         if kind == "kan":
-            out.append(("kan", KANConfig(a, b, spec, pattern=pat)))
+            if masks is not None:
+                kb = (None if override is None
+                      else tuple(int(j) for j in override.indices()))
+                out.append(("kan", KANConfig(a, b, spec, basis_keep=kb)))
+            else:
+                out.append(("kan", KANConfig(a, b, spec, pattern=pat)))
         elif kind == "mlp":
-            mask = (tiled_mask(a, pat) if pat is not None and i > 0
-                    else None)
+            if masks is not None:
+                mask = override
+            else:
+                mask = (tiled_mask(a, pat) if pat is not None and i > 0
+                        else None)
             out.append(("mlp", {"n_in": a, "n_out": b, "mask": mask,
                                 "act": None if last else "relu"}))
         else:
@@ -200,11 +220,13 @@ def vikin_stack_init(key, model, dtype=jnp.float32) -> list:
 
 
 def vikin_stack_apply(params: list, x: jax.Array, model, *,
-                      impl: str = "auto") -> jax.Array:
+                      impl: str = "auto", masks=None) -> jax.Array:
     """Run the full stack; ``impl`` threads the kernel dispatch through
-    every layer (auto | jnp | pallas | pallas_interpret)."""
+    every layer (auto | jnp | pallas | pallas_interpret).  ``masks``
+    substitutes calibrated per-layer masks for the config-derived tiled
+    ones (see stack_layer_cfgs)."""
     h = x
-    for p, (kind, cfg) in zip(params, stack_layer_cfgs(model)):
+    for p, (kind, cfg) in zip(params, stack_layer_cfgs(model, masks)):
         if kind == "kan":
             h = kan_apply(p, h, dataclasses.replace(cfg, impl=impl))
         else:

@@ -27,6 +27,11 @@ padding a singleton batch to M=2 keeps batched and one-at-a-time execution
 bitwise identical (test-pinned).  The workload's ``ModePlan`` (core/modes)
 rides along: every served batch is charged its mode-switch schedule in the
 simulated-cycle report.
+
+Implements the backend protocol and cycle-attribution contract of DESIGN.md
+Sec. 11; serving calibrated sparse checkpoints (``VikinBackend(masks=...)``,
+restored by checkpoint/restore_masks) follows the measurement protocol of
+DESIGN.md Sec. 12.
 """
 from __future__ import annotations
 
@@ -192,7 +197,8 @@ class VikinBackend(ModelBackend):
 
     def __init__(self, model, params, *, impl: str = "auto",
                  hw: Optional[VikinHW] = None, min_bucket: int = 2,
-                 nnz_rates: Optional[Sequence[float]] = None):
+                 nnz_rates: Optional[Sequence[float]] = None,
+                 masks=None):
         import jax
 
         from repro.models.ffn import vikin_stack_apply
@@ -200,11 +206,20 @@ class VikinBackend(ModelBackend):
         self.model, self.params = model, params
         self.impl, self.hw = impl, hw or VikinHW()
         self.min_bucket = min_bucket
+        self.masks = list(masks) if masks is not None else None
         self.plan = ModePlan.for_layers(model.layer_kind_enums())
-        self.layers = model.layer_works(nnz_rates)
+        if self.masks is not None:
+            # calibrated model: charge the cycle model the MEASURED
+            # per-layer mask sparsity, not the config-level rate
+            from repro.core.calibrate import masked_pattern_rates
+            self.layers = model.layer_works(
+                nnz_rates, pattern_rates=masked_pattern_rates(self.masks))
+        else:
+            self.layers = model.layer_works(nnz_rates)
         self.n_in = int(model.sizes[0])
         self._fwd = jax.jit(
-            lambda p, x: vikin_stack_apply(p, x, model, impl=impl))
+            lambda p, x: vikin_stack_apply(p, x, model, impl=impl,
+                                           masks=self.masks))
         self._report_cache: Dict[int, Dict[str, float]] = {}
         self.n_slots = None
 

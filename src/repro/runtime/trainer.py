@@ -1,6 +1,13 @@
-"""Fault-tolerant training loop.
+"""Training loops: the fault-tolerant LM Trainer and the VIKIN StackTrainer.
 
-Contract for 1000+-node runs, all of it exercised by tests on 1 CPU device:
+``StackTrainer`` (bottom of file) fits the paper's KAN/MLP serving stacks
+(models/ffn.vikin_stack_*) on a small regression/classification task with
+AdamW -- the "train" end of the train -> sparsify -> serve pipeline
+(DESIGN.md Sec. 12).  Training always runs DENSE; sparsity masks are derived
+afterwards by core/calibrate and applied at serve time.
+
+``Trainer`` is the fault-tolerant LM training loop.  Contract for
+1000+-node runs, all of it exercised by tests on 1 CPU device:
 
   * **Deterministic resume**: the data source is keyed by step, the step
     counter lives in the checkpointed state, so restart-after-failure
@@ -136,3 +143,121 @@ class Trainer:
                       f"({attempts}/{max_restarts})", flush=True)
                 self._ckpt.wait()
                 self.state = self._init_or_restore()
+
+
+# ---------------------------------------------------------------------------
+# VIKIN stack trainer: fit a KAN/MLP feed-forward stack on a small task.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StackTrainerConfig:
+    steps: int = 300
+    batch_size: int = 64
+    lr: float = 1e-2
+    weight_decay: float = 0.0
+    seed: int = 0
+    log_every: int = 100
+    impl: str = "jnp"          # kernel dispatch during training (jnp = XLA)
+    loss: str = "mse"          # mse (regression) | xent (classification)
+
+
+class StackTrainer:
+    """AdamW fitting of a configs/vikin_models.PaperModelConfig stack.
+
+    The model is trained with ``pattern_rate`` forced to 0 (dense): the
+    two-stage masks are a *post-training* calibration artifact
+    (core/calibrate.calibrate_stack), exactly like the paper's deployment
+    flow.  Data is a data/stack_task.load_stack_task dict; minibatches are
+    drawn deterministically per step so a fixed seed reproduces the run.
+    """
+
+    def __init__(self, model, data, cfg: StackTrainerConfig = None):
+        import jax.numpy as jnp
+
+        from repro.models.ffn import vikin_stack_apply, vikin_stack_init
+        from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+        self.cfg = cfg or StackTrainerConfig()
+        self.model = dataclasses.replace(model, pattern_rate=0.0)
+        self.data = data
+        self.metrics_log: List[Dict[str, float]] = []
+        key = jax.random.key(self.cfg.seed)
+        self.params = vikin_stack_init(key, self.model)
+        self._opt = adamw_init(self.params)
+        acfg = AdamWConfig(lr=lambda _: jnp.asarray(self.cfg.lr),
+                           weight_decay=self.cfg.weight_decay,
+                           no_decay_tokens=("['b']",))
+        use_labels = self.cfg.loss == "xent"
+        impl, mdl = self.cfg.impl, self.model
+
+        def loss_fn(params, x, y):
+            pred = vikin_stack_apply(params, x, mdl, impl=impl)
+            pred = pred.astype(jnp.float32)
+            if use_labels:
+                logp = jax.nn.log_softmax(pred, axis=-1)
+                return -jnp.mean(
+                    jnp.take_along_axis(logp, y[:, None], axis=-1))
+            return jnp.mean(jnp.square(pred - y))
+
+        def step_fn(params, opt, x, y):
+            loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+            params, opt, om = adamw_update(grads, opt, params, acfg)
+            return params, opt, loss, om["grad_norm"]
+
+        self._jit_step = jax.jit(step_fn)
+        self._loss_fn = jax.jit(loss_fn)
+
+    def _batch_at(self, step: int):
+        cfg = self.cfg
+        n = self.data["train_x"].shape[0]
+        rng = np.random.default_rng(cfg.seed * 100003 + step)
+        idx = rng.integers(0, n, size=min(cfg.batch_size, n))
+        x = self.data["train_x"][idx]
+        y = (self.data["train_label"][idx] if cfg.loss == "xent"
+             else self.data["train_y"][idx])
+        return x, y
+
+    def evaluate(self, params=None, masks=None) -> Dict[str, float]:
+        """Val-set metrics; ``masks`` evaluates a sparsified stack.
+
+        Regression reports val_mse; classification reports val_xent +
+        val_acc (outputs are unnormalized logits there, so an MSE against
+        the continuous targets would be meaningless).
+        """
+        import jax.numpy as jnp
+
+        from repro.models.ffn import vikin_stack_apply
+
+        params = self.params if params is None else params
+        x = jnp.asarray(self.data["val_x"])
+        pred = np.asarray(jax.device_get(vikin_stack_apply(
+            params, x, self.model, impl=self.cfg.impl,
+            masks=masks))).astype(np.float64)
+        if self.cfg.loss == "xent":
+            labels = self.data["val_label"]
+            logp = pred - np.log(
+                np.sum(np.exp(pred - pred.max(-1, keepdims=True)),
+                       axis=-1, keepdims=True)) - pred.max(-1, keepdims=True)
+            return {
+                "val_xent": float(-np.mean(
+                    logp[np.arange(labels.shape[0]), labels])),
+                "val_acc": float(np.mean(np.argmax(pred, -1) == labels)),
+            }
+        return {"val_mse": float(np.mean((pred - self.data["val_y"]) ** 2))}
+
+    def run(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        for step in range(cfg.steps):
+            x, y = self._batch_at(step)
+            self.params, self._opt, loss, gnorm = self._jit_step(
+                self.params, self._opt, x, y)
+            if step % cfg.log_every == 0 or step == cfg.steps - 1:
+                m = {"step": step, "loss": float(jax.device_get(loss)),
+                     "grad_norm": float(jax.device_get(gnorm))}
+                self.metrics_log.append(m)
+                print(f"[stack-trainer] step {step} "
+                      f"loss {m['loss']:.5f}", flush=True)
+        final = self.evaluate()
+        return {"params": self.params, "metrics": self.metrics_log,
+                **final}

@@ -1,0 +1,220 @@
+"""Train -> sparsify -> checkpoint -> serve pipeline (DESIGN.md Sec. 12).
+
+Pins the contracts the serving stack relies on:
+  * calibration is deterministic under a fixed seed (masks are artifacts,
+    not runtime state);
+  * a sparsified checkpoint round-trips bit-exact -- params AND masks --
+    and the served outputs are identical pre/post restore;
+  * restore_checkpoint names the offending key/shape instead of failing
+    deep inside tree unflattening.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointMismatchError,
+    restore_checkpoint,
+    restore_masks,
+    save_checkpoint,
+)
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.core.calibrate import (
+    calibrate_stack,
+    keep_per_group_for_rate,
+    masked_pattern_rates,
+)
+from repro.data.stack_task import StackTaskConfig, load_stack_task
+from repro.models.ffn import vikin_stack_apply, vikin_stack_init
+from repro.runtime.backends import VikinBackend
+from repro.runtime.server import Engine
+from repro.runtime.trainer import StackTrainer, StackTrainerConfig
+
+SMALL = dataclasses.replace(VIKIN_ARCHS["vikin-small"], pattern_rate=0.0)
+
+
+def _trained_small(steps=25, seed=0):
+    data = load_stack_task(StackTaskConfig(16, 8, n_train=256, n_val=64,
+                                           seed=seed))
+    tr = StackTrainer(SMALL, data, StackTrainerConfig(
+        steps=steps, batch_size=32, seed=seed, log_every=10 ** 9))
+    out = tr.run()
+    return tr, data, out["params"]
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_deterministic_under_fixed_seed():
+    tr, data, params = _trained_small()
+    calib = data["train_x"][:64]
+    a = calibrate_stack(params, SMALL, calib, keep_per_group=2)
+    b = calibrate_stack(params, SMALL, calib, keep_per_group=2)
+    assert len(a.masks) == len(b.masks) == SMALL.n_layers
+    for ma, mb in zip(a.masks, b.masks):
+        if ma is None:
+            assert mb is None
+        else:
+            np.testing.assert_array_equal(ma.keep, mb.keep)
+    # the whole pipeline re-run from scratch gives the same masks too
+    tr2, data2, params2 = _trained_small()
+    c = calibrate_stack(params2, SMALL, data2["train_x"][:64],
+                        keep_per_group=2)
+    for ma, mc in zip(a.masks, c.masks):
+        if ma is not None:
+            np.testing.assert_array_equal(ma.keep, mc.keep)
+
+
+def test_calibration_respects_layer_contracts():
+    tr, data, params = _trained_small(steps=5)
+    sp = calibrate_stack(params, SMALL, data["train_x"][:32],
+                         keep_per_group=2)
+    # layer 0 is MLP on raw features: never masked
+    assert sp.masks[0] is None
+    # layer 1 is KAN: mask over the basis dim, m-of-4 per full group
+    m = sp.masks[1]
+    assert m is not None and m.n == SMALL.spec.n_bases
+    full = (m.n // 4) * 4
+    assert all(m.keep[:full].reshape(-1, 4).sum(1) == 2)
+    assert m.keep[full:].all()          # trailing partial group kept
+    rates = masked_pattern_rates(sp.masks)
+    assert rates[0] == 0.0 and 0.0 < rates[1] < 1.0
+
+
+def test_keep_per_group_rate_mapping():
+    assert keep_per_group_for_rate(0.0) == 4
+    assert keep_per_group_for_rate(0.5) == 2
+    assert keep_per_group_for_rate(0.75) == 1
+    with pytest.raises(ValueError):
+        keep_per_group_for_rate(0.4)
+
+
+def test_keep4_yields_dense_masks():
+    tr, data, params = _trained_small(steps=5)
+    sp = calibrate_stack(params, SMALL, data["train_x"][:32],
+                         keep_per_group=4)
+    assert all(m is None for m in sp.masks)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def test_stack_trainer_reduces_val_mse():
+    data = load_stack_task(StackTaskConfig(16, 8, n_train=512, n_val=64))
+    tr = StackTrainer(SMALL, data, StackTrainerConfig(
+        steps=80, batch_size=64, log_every=10 ** 9))
+    before = tr.evaluate()["val_mse"]
+    out = tr.run()
+    assert out["val_mse"] < before
+
+
+def test_stack_task_deterministic():
+    a = load_stack_task(StackTaskConfig(16, 8, seed=3))
+    b = load_stack_task(StackTaskConfig(16, 8, seed=3))
+    np.testing.assert_array_equal(a["train_x"], b["train_x"])
+    np.testing.assert_array_equal(a["val_y"], b["val_y"])
+    c = load_stack_task(StackTaskConfig(16, 8, seed=4))
+    assert not np.array_equal(a["train_x"], c["train_x"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip (params + masks, served outputs)
+# ---------------------------------------------------------------------------
+
+
+def test_sparsified_checkpoint_roundtrip_bit_exact(tmp_path):
+    tr, data, params = _trained_small(steps=10)
+    sp = calibrate_stack(params, SMALL, data["train_x"][:32],
+                         keep_per_group=2)
+    save_checkpoint(str(tmp_path), 10, params, masks=sp.masks,
+                    extra={"arch": SMALL.name})
+    target = vikin_stack_init(jax.random.key(42), SMALL)  # different init
+    restored, step, extra = restore_checkpoint(str(tmp_path), target)
+    assert step == 10 and extra["arch"] == SMALL.name
+    for p, r in zip(params, restored):
+        for k in p:
+            np.testing.assert_array_equal(np.asarray(p[k]),
+                                          np.asarray(r[k]))
+    rmasks = restore_masks(str(tmp_path))
+    assert len(rmasks) == len(sp.masks)
+    for m, rm in zip(sp.masks, rmasks):
+        if m is None:
+            assert rm is None
+        else:
+            assert rm.keep.dtype == np.bool_
+            np.testing.assert_array_equal(m.keep, rm.keep)
+
+
+def test_served_outputs_identical_pre_post_restore(tmp_path):
+    tr, data, params = _trained_small(steps=10)
+    sp = calibrate_stack(params, SMALL, data["train_x"][:32],
+                         keep_per_group=2)
+    save_checkpoint(str(tmp_path), 10, params, masks=sp.masks)
+    target = vikin_stack_init(jax.random.key(7), SMALL)
+    restored, _, _ = restore_checkpoint(str(tmp_path), target)
+    rmasks = restore_masks(str(tmp_path))
+
+    def serve(p, masks):
+        eng = Engine(VikinBackend(SMALL, p, impl="jnp", masks=masks),
+                     n_slots=3)
+        rids = [eng.submit(data["val_x"][i]) for i in range(5)]
+        out = eng.run_until_done()
+        return np.stack([out[r] for r in rids])
+
+    np.testing.assert_array_equal(serve(params, list(sp.masks)),
+                                  serve(restored, rmasks))
+
+
+def test_restore_masks_none_for_dense_checkpoint(tmp_path):
+    params = vikin_stack_init(jax.random.key(0), SMALL)
+    save_checkpoint(str(tmp_path), 1, params)
+    assert restore_masks(str(tmp_path)) is None
+
+
+def test_masked_serving_uses_measured_rates():
+    tr, data, params = _trained_small(steps=5)
+    sp = calibrate_stack(params, SMALL, data["train_x"][:32],
+                         keep_per_group=2)
+    b = VikinBackend(SMALL, params, impl="jnp", masks=list(sp.masks))
+    rates = masked_pattern_rates(sp.masks)
+    assert [lw.pattern_rate for lw in b.layers] == rates
+
+
+# ---------------------------------------------------------------------------
+# restore_checkpoint error quality
+# ---------------------------------------------------------------------------
+
+
+def test_restore_checkpoint_names_shape_mismatch(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": np.zeros((2, 3)),
+                                       "b": np.ones((4,))})
+    with pytest.raises(CheckpointMismatchError) as ei:
+        restore_checkpoint(str(tmp_path), {"a": np.zeros((2, 5)),
+                                           "b": np.ones((4,))})
+    msg = str(ei.value)
+    assert "'a'" in msg and "(2, 3)" in msg and "(2, 5)" in msg
+    assert str(tmp_path) in msg
+
+
+def test_restore_checkpoint_names_missing_leaf(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": np.zeros((2, 3))})
+    with pytest.raises(CheckpointMismatchError) as ei:
+        restore_checkpoint(str(tmp_path), {"a": np.zeros((2, 3)),
+                                           "c": np.zeros((1,))})
+    assert "missing leaf" in str(ei.value) and "'c'" in str(ei.value)
+
+
+def test_restore_checkpoint_partial_target_still_works(tmp_path):
+    # restoring a SUBSET of the saved tree (e.g. params out of a full train
+    # state) must stay legal -- extra checkpoint leaves are not an error
+    save_checkpoint(str(tmp_path), 1, {"params": {"w": np.arange(6.0)},
+                                       "opt": {"mu": np.zeros(6)}})
+    tree, _, _ = restore_checkpoint(str(tmp_path),
+                                    {"params": {"w": np.zeros(6)}})
+    np.testing.assert_array_equal(tree["params"]["w"], np.arange(6.0))
