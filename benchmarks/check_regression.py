@@ -1,0 +1,214 @@
+"""Bench-regression gate: fail CI when the bench artifacts drift.
+
+The smoke jobs have always *emitted* BENCH_kernels.json / BENCH_serving.json
+and uploaded them as artifacts; nothing ever looked at the numbers, so a
+kernel numerics regression or a cycle-model change could merge silently as
+long as the bench still ran.  This gate closes that hole: it diffs the
+freshly-emitted artifact against the baseline committed at HEAD and exits
+non-zero beyond tolerance.
+
+Only DETERMINISTIC fields gate -- simulated cycles (per-request, which is
+batch-size independent by construction, DESIGN.md Sec. 11), oracle errors,
+dispatch/op/byte counts, mode plans, and the sharded bitwise-identity flag.
+Wall-clock fields (``wall_*``, ``*_rps``) and training-dependent accuracy
+(``val_mse``) never gate: they vary run to run / with CI step counts.
+
+The benches overwrite the artifact in place, so the baseline is read from
+git (``git show HEAD:<name>``) by default; a PR that intentionally moves a
+benchmark must commit the regenerated artifact, which is exactly the review
+surface we want.
+
+Usage (CI):
+  python -m benchmarks.check_regression --serving   # after serving_bench
+  python -m benchmarks.check_regression --kernels   # after kernel_bench
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from typing import Any, Dict, List
+
+KERNELS = "BENCH_kernels.json"
+SERVING = "BENCH_serving.json"
+
+# kernels artifact: numeric leaves ending in one of these are oracle errors
+# (gated by the drift rule); every other numeric leaf is a count/byte/op
+# field and must match exactly.  Non-gating fields are listed explicitly.
+_ERR_KEYS = ("max_err", "max_err_v1", "max_err_v2", "oracle_max_err")
+_SKIP_KEYS = ("wall_", "_rps", "val_mse", "time", "_ms")
+
+
+class Findings:
+    def __init__(self) -> None:
+        self.rows: List[str] = []
+
+    def fail(self, path: str, msg: str) -> None:
+        self.rows.append(f"  {path}: {msg}")
+
+    def report(self, label: str) -> bool:
+        if self.rows:
+            print(f"REGRESSION in {label}:")
+            print("\n".join(self.rows))
+            return False
+        print(f"{label}: no regressions")
+        return True
+
+
+def _baseline(name: str, ref: str) -> Dict:
+    out = subprocess.run(["git", "show", f"{ref}:{name}"],
+                         capture_output=True, text=True, check=True)
+    return json.loads(out.stdout)
+
+
+def _close(a: float, b: float, rtol: float) -> bool:
+    return abs(a - b) <= rtol * max(abs(a), abs(b), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Kernels artifact: generic walk over the committed structure.
+# ---------------------------------------------------------------------------
+
+
+def check_kernels(base: Any, fresh: Any, f: Findings, *, err_factor: float,
+                  err_floor: float, path: str = "") -> None:
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            f.fail(path, f"expected object, got {type(fresh).__name__}")
+            return
+        for k, bv in base.items():
+            if any(s in k for s in _SKIP_KEYS):
+                continue
+            if k not in fresh:
+                f.fail(f"{path}.{k}", "missing from fresh artifact "
+                       "(bench coverage regression)")
+                continue
+            check_kernels(bv, fresh[k], f, err_factor=err_factor,
+                          err_floor=err_floor, path=f"{path}.{k}")
+        return
+    key = path.rsplit(".", 1)[-1]
+    if isinstance(base, (int, float)) and not isinstance(base, bool):
+        if key in _ERR_KEYS or key.startswith("max_err"):
+            # oracle error may wiggle with compiler version; gate on
+            # order-of-magnitude drift, not bit equality
+            lim = max(err_factor * float(base), err_floor)
+            if float(fresh) > lim:
+                f.fail(path, f"oracle error {fresh:g} exceeds {lim:g} "
+                       f"(baseline {base:g} x{err_factor:g})")
+        elif not _close(float(base), float(fresh), 1e-9):
+            f.fail(path, f"count/op field changed: {base!r} -> {fresh!r}")
+    elif base != fresh:
+        f.fail(path, f"{base!r} -> {fresh!r}")
+
+
+# ---------------------------------------------------------------------------
+# Serving artifact: explicit per-row-kind rules (rows are emitted at CI step
+# counts / request counts that differ from the committed defaults, so only
+# per-request-normalized and structural fields compare).
+# ---------------------------------------------------------------------------
+
+
+def _cmp(f: Findings, path: str, base: float, fresh: Any,
+         rtol: float) -> None:
+    if fresh is None:
+        f.fail(path, "missing from fresh artifact")
+    elif not _close(float(base), float(fresh), rtol):
+        f.fail(path, f"sim drift: {base:g} -> {fresh:g} (rtol {rtol:g})")
+
+
+def check_serving(base: Dict, fresh: Dict, f: Findings,
+                  *, rtol: float) -> None:
+    # The baseline must carry the multi-device rows, or the bitwise-
+    # identity gate silently vanishes: regenerating the artifact on a
+    # 1-device machine (where run() skips sharded rows by design) and
+    # committing it would otherwise weaken CI without failing it.
+    if not any(n.startswith("sharded:") for n in base):
+        f.fail("sharded:*", "no sharded rows in the committed baseline; "
+               "regenerate it under "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    for name, b in base.items():
+        if name not in fresh:
+            hint = (" -- re-run serving_bench under XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4"
+                    if name.startswith("sharded:") else "")
+            f.fail(name, "row missing from fresh artifact "
+                   f"(bench coverage regression){hint}")
+            continue
+        r = fresh[name]
+        if name.startswith("sharded:"):
+            if r.get("devices") != b["devices"]:
+                f.fail(f"{name}.devices", f"{b['devices']} -> "
+                       f"{r.get('devices')}")
+            if r.get("bitwise_identical") is not True:
+                f.fail(f"{name}.bitwise_identical",
+                       "multi-device outputs no longer bitwise-identical "
+                       "to single-device")
+            for side in ("single", "multi"):
+                for k, bv in b[side].items():
+                    if "cycles_per_req" in k:
+                        _cmp(f, f"{name}.{side}.{k}", bv,
+                             r.get(side, {}).get(k), rtol)
+            _cmp(f, f"{name}.array_cycle_speedup", b["array_cycle_speedup"],
+                 r.get("array_cycle_speedup"), rtol)
+        elif name.startswith("trained:"):
+            for side in ("dense", "sparse"):
+                _cmp(f, f"{name}.{side}.sim_cycles_per_req",
+                     b[side]["sim_cycles_per_req"],
+                     r.get(side, {}).get("sim_cycles_per_req"), rtol)
+            _cmp(f, f"{name}.cycle_speedup", b["cycle_speedup"],
+                 r.get("cycle_speedup"), rtol)
+            if r.get("mask_keep_rates") != b["mask_keep_rates"]:
+                f.fail(f"{name}.mask_keep_rates",
+                       f"{b['mask_keep_rates']} -> "
+                       f"{r.get('mask_keep_rates')}")
+        else:
+            _cmp(f, f"{name}.sim_cycles_per_req", b["sim_cycles_per_req"],
+                 r.get("sim_cycles_per_req"), rtol)
+            if r.get("mode_plan") != b["mode_plan"]:
+                f.fail(f"{name}.mode_plan",
+                       f"{b['mode_plan']} -> {r.get('mode_plan')}")
+            b_sw = b["mode_switches"] / max(b["requests"], 1)
+            r_sw = r.get("mode_switches", 0) / max(r.get("requests", 1), 1)
+            _cmp(f, f"{name}.mode_switches_per_req", b_sw, r_sw, rtol)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", action="store_true",
+                    help=f"gate {KERNELS} against the committed baseline")
+    ap.add_argument("--serving", action="store_true",
+                    help=f"gate {SERVING} against the committed baseline")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baselines")
+    ap.add_argument("--rtol", type=float, default=0.01,
+                    help="relative tolerance on simulated-cycle fields")
+    ap.add_argument("--err-factor", type=float, default=4.0,
+                    help="allowed oracle-error growth factor")
+    ap.add_argument("--err-floor", type=float, default=1e-6,
+                    help="oracle errors below this never gate")
+    args = ap.parse_args()
+    if not (args.kernels or args.serving):
+        ap.error("nothing to check: pass --kernels and/or --serving")
+
+    ok = True
+    if args.kernels:
+        f = Findings()
+        with open(KERNELS) as fh:
+            fresh = json.load(fh)
+        check_kernels(_baseline(KERNELS, args.baseline_ref), fresh, f,
+                      err_factor=args.err_factor, err_floor=args.err_floor,
+                      path=KERNELS)
+        ok &= f.report(KERNELS)
+    if args.serving:
+        f = Findings()
+        with open(SERVING) as fh:
+            fresh = json.load(fh)
+        check_serving(_baseline(SERVING, args.baseline_ref), fresh, f,
+                      rtol=args.rtol)
+        ok &= f.report(SERVING)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

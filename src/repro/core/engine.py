@@ -256,28 +256,107 @@ def run_model(
     )
 
 
+# ---------------------------------------------------------------------------
+# Multi-chip VIKIN array (DESIGN.md Sec. 13).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VikinArray:
+    """``n_chips`` VIKIN engines behind one host port (scale-out serving).
+
+    The host holds the request batch, scatters row shards to the chips over
+    a shared host port, every chip streams its rows through the single-chip
+    model (run_model), and the host gathers the output rows back.  Chips
+    compute in parallel, so the array's wall cycles are
+
+        max-per-chip compute  +  scatter/gather transfer  +  per-chip DMA
+
+    * Transfer: all batch rows cross the shared port once in (n_in feats)
+      and once out (n_out feats) at ``host_bytes_per_cycle`` -- chips do not
+      get faster links by existing; the port is the bottleneck resource
+      (same assumption as the paper's single-DDR-port prototype, scaled).
+    * DMA setup: ``dma_setup_cycles`` per chip per direction, so the fixed
+      cost GROWS with n_chips -- which is what makes small batches stop
+      profiting from more chips (the classic scale-out knee, pinned in
+      tests/test_sharded.py).
+
+    Cycle attribution stays per-row on the chips: every row still pays its
+    mode plan on whichever chip serves it, so mode_switches / reconfig
+    totals are array-size independent.
+    """
+
+    hw: VikinHW = VikinHW()
+    n_chips: int = 1
+    host_bytes_per_cycle: float = 64.0   # shared host<->array port width
+    dma_setup_cycles: float = 96.0       # per chip, per direction
+    bytes_per_feat: int = 2              # FP16 activations on the wire
+
+    def __post_init__(self):
+        if self.n_chips < 1:
+            raise ValueError(f"n_chips must be >= 1, got {self.n_chips}")
+
+    def rows_per_chip(self, batch: int) -> int:
+        return math.ceil(max(batch, 1) / self.n_chips)
+
+    def comm_cycles(self, batch: int, n_in: int, n_out: int) -> float:
+        """Scatter inputs + gather outputs for one served batch."""
+        xfer_bytes = max(batch, 1) * (n_in + n_out) * self.bytes_per_feat
+        return (xfer_bytes / self.host_bytes_per_cycle
+                + 2.0 * self.n_chips * self.dma_setup_cycles)
+
+
 def serving_report(
     layers: Sequence[LayerWork],
     hw: VikinHW = VikinHW(),
     *,
     batch: int = 1,
+    array: Optional[VikinArray] = None,
 ) -> dict:
     """One served batch's simulated-hardware accounting (runtime backends).
 
-    The single-instance engine streams batch rows sequentially (run_model),
-    so cycles scale linearly in ``batch`` and each instance pays the mode
-    plan's reconfiguration schedule once; per-request attribution is
-    therefore ``sim_cycles / batch``.
+    Without ``array`` (the single-chip engine), batch rows stream
+    sequentially (run_model), so cycles scale linearly in ``batch``, each
+    row pays the mode plan, and per-request attribution is
+    ``sim_cycles / batch`` -- batch-size independent.
+
+    With ``array``, rows are split evenly over ``array.n_chips`` chips that
+    compute in parallel: ``sim_cycles`` becomes the array's WALL cycles
+    (max per-chip compute + host scatter/gather), reported next to the
+    per-chip compute (``chip_cycles``) and transfer (``comm_cycles``)
+    breakdown.  Mode-switch totals stay per-row (every row pays its plan on
+    its own chip), so they match the single-chip report for the same batch.
     """
     plan = ModePlan.for_layers([w.kind for w in layers])
-    rep = run_model(layers, hw, batch=max(batch, 1))
-    return {
-        "sim_cycles": rep.cycles,
-        "sim_latency_s": rep.latency_s,
-        "sim_macs": rep.macs,
+    batch = max(batch, 1)
+    out = {
         "mode_switches": float(plan.n_switches * batch),
         "reconfig_cycles": float(plan.reconfig_cycles * batch),
     }
+    if array is None:
+        rep = run_model(layers, hw, batch=batch)
+        out.update(sim_cycles=rep.cycles, sim_latency_s=rep.latency_s,
+                   sim_macs=rep.macs)
+        return out
+    if array.hw != hw:
+        raise ValueError(
+            "serving_report: array.hw disagrees with the hw argument; "
+            "build the VikinArray with the chip model you are reporting "
+            "against (the array's hw is what the chips run)")
+    chip = run_model(layers, array.hw, batch=array.rows_per_chip(batch))
+    comm = array.comm_cycles(batch, layers[0].n_in, layers[-1].n_out)
+    cycles = chip.cycles + comm
+    out.update(
+        sim_cycles=cycles,
+        sim_latency_s=cycles / array.hw.clock_hz,
+        # all chips together issue every row's MACs, not just the slowest
+        # chip's share (n_chips itself is static config, not a per-batch
+        # quantity, so it stays out of this additive report)
+        sim_macs=chip.macs / array.rows_per_chip(batch) * batch,
+        chip_cycles=chip.cycles,
+        comm_cycles=comm,
+    )
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,81 @@
+"""Compat shims for the pinned jax toolchain (jax 0.4.37, DESIGN.md Sec. 13).
+
+The repo targets the modern jax sharding surface (``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``, ``jax.shard_map``),
+but the pinned CI toolchain is jax 0.4.37, which predates all four.  Rather
+than forking every call site on a version check, importing this module
+installs small forward-compat shims ON 0.4.37 ONLY (each shim is a no-op
+when the real API exists):
+
+  * ``jax.sharding.AxisType`` -- the Auto/Explicit/Manual enum.  0.4.37 has
+    no explicit-sharding type system, so the values are inert markers; every
+    mesh behaves as Auto, which is the only value this repo ever passes.
+  * ``jax.make_mesh`` -- accepts and drops the ``axis_types`` keyword.
+  * ``jax.set_mesh`` -- returns the mesh itself (``Mesh`` is a context
+    manager on 0.4.37, so ``with jax.set_mesh(m):`` keeps working; the
+    ambient explicit-mesh semantics it enables on new jax do not exist on
+    0.4.37, and code guards that path by feature-testing
+    ``jax.sharding.get_abstract_mesh`` -- see models/moe._ambient_mesh_axes).
+  * ``shard_map`` (exported HERE, not monkeypatched): the one callable the
+    repo should use.  New jax spells it ``jax.shard_map(..., check_vma=)``,
+    0.4.37 ``jax.experimental.shard_map.shard_map(..., check_rep=)``; this
+    wrapper takes the mesh explicitly and maps the kwarg.
+
+Import order does not matter and the install is idempotent; the modules
+that front the sharding surface (launch/mesh.py, launch/sharding.py,
+runtime/sharded.py) and tests/conftest.py all import this module first.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for jax.sharding.AxisType on jax < 0.5 (inert markers)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _real_make_mesh = jax.make_mesh
+
+        @functools.wraps(_real_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            return _real_make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        def set_mesh(mesh):
+            return mesh          # Mesh is a context manager on 0.4.37
+
+        jax.set_mesh = set_mesh
+
+
+_install()
+
+
+if hasattr(jax, "shard_map"):
+    _CHECK_KW = ("check_vma" if "check_vma"
+                 in inspect.signature(jax.shard_map).parameters
+                 else "check_rep")
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{_CHECK_KW: check_rep})
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
+        return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_rep)

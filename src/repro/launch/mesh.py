@@ -11,6 +11,8 @@ from typing import Tuple
 
 import jax
 
+from repro import jax_compat  # noqa: F401  (installs AxisType/make_mesh shims)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -23,6 +25,25 @@ def make_host_mesh():
     """1-device mesh with the same axis names (tests / examples on CPU)."""
     return jax.make_mesh((1, 1), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def serving_mesh(n_devices: int):
+    """1-D ("data",) mesh over the first ``n_devices`` local devices --
+    the data-parallel serving topology (runtime/sharded.py).  On CPU CI,
+    XLA_FLAGS=--xla_force_host_platform_device_count=N provides the
+    devices; the flag must be set before jax initializes."""
+    import numpy as np
+
+    avail = jax.devices()
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if n_devices > len(avail):
+        raise ValueError(
+            f"serving_mesh: {n_devices} devices requested but only "
+            f"{len(avail)} visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
+            f"before the process starts")
+    return jax.sharding.Mesh(np.asarray(avail[:n_devices]), ("data",))
 
 
 def data_axes(mesh) -> Tuple[str, ...]:

@@ -19,6 +19,16 @@ trained sparse model instead of random-init weights:
 
   PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
       --ckpt /tmp/vikin_ckpt --requests 8 --impl pallas_interpret
+
+``--devices N`` serves the workload data-parallel over N devices
+(runtime/sharded.ShardedVikinBackend): replicated params, per-device
+request buckets, and the multi-chip VikinArray cycle model (DESIGN.md
+Sec. 13).  Served outputs are bitwise identical to ``--devices 1``.  On
+CPU, force the device count before jax initializes:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
+      --devices 4 --requests 8 --impl pallas_interpret
 """
 from __future__ import annotations
 
@@ -57,7 +67,16 @@ def _serve_vikin(args, model):
             kept = [None if m is None else f"{m.n_keep}/{m.n}"
                     for m in masks]
             print(f"  restored per-layer masks (kept): {kept}")
-    backend = VikinBackend(model, params, impl=args.impl, masks=masks)
+    if args.devices > 1:
+        from repro.runtime.sharded import ShardedVikinBackend
+        backend = ShardedVikinBackend(model, params, impl=args.impl,
+                                      masks=masks, devices=args.devices)
+        print(f"sharded serving: {args.devices} devices "
+              f"({backend.mesh.devices.ravel()[0].platform}), "
+              f"per-shard bucket >= {backend.shard_bucket(args.slots)} "
+              f"at full occupancy")
+    else:
+        backend = VikinBackend(model, params, impl=args.impl, masks=masks)
     eng = Engine(backend, n_slots=args.slots)
 
     plan = backend.plan.summary()
@@ -84,6 +103,10 @@ def _serve_vikin(args, model):
           f"({tp.get('sim_rps', 0):.0f} req/s), "
           f"{int(s['mode_switches'])} mode switches "
           f"({s['reconfig_cycles']:.0f} reconfig cycles)")
+    if "chip_cycles" in s:
+        print(f"  array: {args.devices} chips, "
+              f"{s['chip_cycles']:.0f} per-chip compute cycles + "
+              f"{s['comm_cycles']:.0f} scatter/gather cycles")
 
 
 def _serve_transformer(args, cfg):
@@ -138,6 +161,10 @@ def main():
     ap.add_argument("--impl", default="auto",
                     choices=["auto", "jnp", "pallas", "pallas_interpret"],
                     help="kernel dispatch for vikin-* archs")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="vikin archs: data-parallel serving over N devices "
+                         "(runtime/sharded; outputs bitwise identical to "
+                         "--devices 1)")
     args = ap.parse_args()
 
     from repro.configs.registry import get_serving_config
@@ -149,6 +176,11 @@ def main():
     if family == "vikin":
         _serve_vikin(args, cfg)
     else:
+        if args.devices > 1:
+            raise SystemExit(
+                f"--devices is vikin-only (runtime/sharded); serving "
+                f"{args.arch!r} would silently run single-device. Drop "
+                f"the flag or serve a vikin-* workload")
         _serve_transformer(args, cfg)
 
 

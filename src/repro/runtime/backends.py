@@ -201,10 +201,9 @@ class VikinBackend(ModelBackend):
                  masks=None):
         import jax
 
-        from repro.models.ffn import vikin_stack_apply
-
         self.model, self.params = model, params
         self.impl, self.hw = impl, hw or VikinHW()
+        self.array = None          # multi-chip model (runtime/sharded.py)
         self.min_bucket = min_bucket
         self.masks = list(masks) if masks is not None else None
         self.plan = ModePlan.for_layers(model.layer_kind_enums())
@@ -217,11 +216,20 @@ class VikinBackend(ModelBackend):
         else:
             self.layers = model.layer_works(nnz_rates)
         self.n_in = int(model.sizes[0])
-        self._fwd = jax.jit(
-            lambda p, x: vikin_stack_apply(p, x, model, impl=impl,
-                                           masks=self.masks))
+        self._fwd = jax.jit(self.forward_fn())
         self._report_cache: Dict[int, Dict[str, float]] = {}
         self.n_slots = None
+
+    def forward_fn(self):
+        """The raw batched forward ``(params, x) -> y`` this backend jits;
+        the ONE definition of what a VIKIN forward is.  ShardedVikinBackend
+        wraps exactly this in shard_map, so the two backends cannot
+        drift."""
+        from repro.models.ffn import vikin_stack_apply
+
+        model, impl, masks = self.model, self.impl, self.masks
+        return lambda p, x: vikin_stack_apply(p, x, model, impl=impl,
+                                              masks=masks)
 
     def init_state(self, n_slots: int, max_len: int):
         self.n_slots = n_slots
@@ -268,8 +276,9 @@ class VikinBackend(ModelBackend):
         """VIKIN cycle model for one served batch (batches stream
         sequentially through the single engine instance, so cycles scale
         linearly in n_active and every batch pays the mode plan once per
-        instance)."""
+        instance).  ``self.array`` (set by ShardedVikinBackend) swaps in
+        the multi-chip report."""
         if n_active not in self._report_cache:
             self._report_cache[n_active] = serving_report(
-                self.layers, self.hw, batch=n_active)
+                self.layers, self.hw, batch=n_active, array=self.array)
         return dict(self._report_cache[n_active])

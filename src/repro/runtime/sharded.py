@@ -1,0 +1,87 @@
+"""Data-parallel sharded VIKIN serving (DESIGN.md Sec. 13).
+
+``ShardedVikinBackend`` scales the single-device ``VikinBackend`` across a
+device mesh: stack params are placed REPLICATED on a 1-D ("data",) serving
+mesh (launch/mesh.serving_mesh) and each engine tick's active slots are
+split into per-device request buckets run through one ``shard_map``-mapped
+forward -- the engine drains its queue across N devices per tick while the
+tick loop, slot lanes and admission logic stay exactly runtime/server.py.
+
+The bucket contract is preserved PER SHARD: every device sees a zero-padded
+power-of-two batch block (>= ``min_bucket``), so each shard executes the
+same local program the single-device backend pins as bitwise-deterministic
+(DESIGN.md Sec. 11 -- rows of a contraction are independent, so a request's
+output does not depend on which bucket size, or now which shard, computed
+it).  Multi-device serving is therefore bitwise identical to single-device
+serving for the same requests (pinned in tests/test_sharded.py and gated by
+the CI ``sharded-smoke`` job on forced host devices).
+
+Simulated-hardware accounting swaps the single-chip report for the
+multi-chip ``core/engine.VikinArray`` model: per-chip cycles for the row
+shard each chip computes, plus the host scatter/gather transfer -- so
+``ModePlan`` charges and per-request cycle attribution stay meaningful at
+scale.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import jax_compat
+from repro.core.engine import VikinArray, VikinHW
+from repro.launch.mesh import serving_mesh
+from repro.runtime.backends import VikinBackend, _next_pow2
+
+
+class ShardedVikinBackend(VikinBackend):
+    """VikinBackend fanned out over ``devices`` data-parallel shards.
+
+    Drop-in for ``VikinBackend`` in ``runtime/server.Engine``: only the
+    batched forward (shard_map over the serving mesh), the bucket shape
+    (``devices`` x per-shard power-of-two) and the cycle model (VikinArray)
+    change; state staging, validation and slot handling are inherited.
+    """
+
+    def __init__(self, model, params, *, devices: int, impl: str = "auto",
+                 hw: Optional[VikinHW] = None, min_bucket: int = 2,
+                 nnz_rates: Optional[Sequence[float]] = None,
+                 masks=None, array: Optional[VikinArray] = None):
+        super().__init__(model, params, impl=impl, hw=hw,
+                         min_bucket=min_bucket, nnz_rates=nnz_rates,
+                         masks=masks)
+        self.mesh = serving_mesh(devices)
+        self.n_shards = devices
+        self.array = array or VikinArray(hw=self.hw, n_chips=devices)
+        if self.array.n_chips != devices:
+            raise ValueError(
+                f"array models {self.array.n_chips} chips but the mesh "
+                f"shards over {devices} devices")
+        if self.array.hw != self.hw:
+            raise ValueError(
+                "array.hw disagrees with the backend's hw: the array's "
+                "chip model is what the cycle report runs")
+        # replicated param placement: every shard owns a full copy of the
+        # (tiny, KB-scale) stack; requests shard, weights don't.
+        self.params = jax.device_put(
+            self.params, NamedSharding(self.mesh, P()))
+        fwd = jax_compat.shard_map(
+            self.forward_fn(),
+            mesh=self.mesh,
+            in_specs=(P(), P("data", None)),
+            out_specs=P("data", None),
+            check_rep=False,
+        )
+        self._fwd = jax.jit(fwd)
+
+    def shard_bucket(self, n_active: int) -> int:
+        """Per-shard rows: the power-of-two bucket for this shard's slice
+        of the active set (>= min_bucket, the bitwise-determinism floor)."""
+        per_shard = -(-max(n_active, 1) // self.n_shards)   # ceil div
+        return _next_pow2(max(per_shard, self.min_bucket))
+
+    def bucket(self, n_active: int) -> int:
+        """Global batch fed to the mapped forward: ``n_shards`` contiguous
+        per-shard buckets (shard j owns rows [j*b, (j+1)*b))."""
+        return self.n_shards * self.shard_bucket(n_active)

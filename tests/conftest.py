@@ -1,0 +1,8 @@
+"""Install the pinned-toolchain jax shims before any test touches jax.
+
+Tests use the modern sharding surface (``jax.sharding.AxisType``,
+``jax.make_mesh(axis_types=...)``, ``jax.set_mesh``) directly; on the
+pinned jax 0.4.37 those come from repro.jax_compat, which installs
+forward-compat shims at import (no-ops on newer jax).
+"""
+import repro.jax_compat  # noqa: F401

@@ -25,7 +25,10 @@ def _tiny_setup(tmp_path, max_steps=8, failure_at=None, ckpt_every=2,
                          ckpt_every=ckpt_every, failure_at=failure_at,
                          log_every=100, seed=seed)
     mesh = make_host_mesh()
-    opts = StepOptions(lr=1e-3, total_steps=max_steps, warmup=0)
+    # lr high enough that 12 steps beat the zipf-unigram noise floor by a
+    # clear margin (at 1e-3 the loss hovers within noise of ln(vocab) and
+    # the decrease assertion is a coin flip on the pinned toolchain)
+    opts = StepOptions(lr=1e-2, total_steps=max_steps, warmup=0)
     return Trainer(cfg, tcfg, mesh, data, opts)
 
 

@@ -1,0 +1,203 @@
+"""Multi-device sharded VIKIN serving (runtime/sharded, DESIGN.md Sec. 13).
+
+The scale-out contract has three legs, each pinned here:
+
+  * OUTPUTS: multi-device serving is bitwise identical to single-device
+    serving for the same requests (forced host devices, subprocess --
+    forcing the device count must precede jax init).
+  * SHAPES: every shard sees a zero-padded power-of-two bucket >=
+    min_bucket, the same local program the single-device backend pins.
+  * CYCLES: the VikinArray model charges per-chip compute for the row
+    shard each chip owns plus host scatter/gather, preserves per-row
+    mode-plan totals, and reduces to the single-chip model at n_chips=1.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.core.engine import VikinArray, run_model, serving_report
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# VikinArray cycle accounting (pure model, no devices needed).
+# ---------------------------------------------------------------------------
+
+
+def _layers(arch="vikin-mixed"):
+    return VIKIN_ARCHS[arch].layer_works()
+
+
+def test_array_one_chip_is_single_chip_plus_transfer():
+    layers = _layers()
+    base = serving_report(layers, batch=8)
+    a1 = serving_report(layers, batch=8, array=VikinArray(n_chips=1))
+    assert a1["chip_cycles"] == base["sim_cycles"]
+    assert a1["sim_cycles"] == pytest.approx(
+        base["sim_cycles"] + a1["comm_cycles"])
+    assert a1["comm_cycles"] > 0
+
+
+def test_array_chip_cycles_split_rows_evenly():
+    layers = _layers()
+    for chips, batch in [(4, 8), (4, 7), (2, 5), (8, 8)]:
+        arr = VikinArray(n_chips=chips)
+        rep = serving_report(layers, batch=batch, array=arr)
+        rows = -(-batch // chips)
+        assert arr.rows_per_chip(batch) == rows
+        assert rep["chip_cycles"] == pytest.approx(
+            run_model(layers, arr.hw, batch=rows).cycles)
+        assert rep["sim_cycles"] == pytest.approx(
+            rep["chip_cycles"] + rep["comm_cycles"])
+
+
+def test_array_mode_plan_totals_are_chip_count_independent():
+    """Every row pays its mode plan on whichever chip serves it."""
+    layers = _layers()
+    base = serving_report(layers, batch=12)
+    for chips in (1, 2, 4):
+        rep = serving_report(layers, batch=12,
+                             array=VikinArray(n_chips=chips))
+        assert rep["mode_switches"] == base["mode_switches"]
+        assert rep["reconfig_cycles"] == base["reconfig_cycles"]
+
+
+def test_array_speedup_and_scale_out_knee():
+    """Large batches profit from chips; the per-chip DMA setup charge grows
+    with the array, so tiny batches eventually stop profiting (the knee)."""
+    layers = _layers()
+    big1 = serving_report(layers, batch=64, array=VikinArray(n_chips=1))
+    big4 = serving_report(layers, batch=64, array=VikinArray(n_chips=4))
+    assert big4["sim_cycles"] < big1["sim_cycles"]
+    assert big4["comm_cycles"] > big1["comm_cycles"]
+    # batch 1: nothing to parallelize, more chips = pure DMA overhead
+    one1 = serving_report(layers, batch=1, array=VikinArray(n_chips=1))
+    one8 = serving_report(layers, batch=1, array=VikinArray(n_chips=8))
+    assert one8["sim_cycles"] > one1["sim_cycles"]
+
+
+def test_array_rejects_zero_chips():
+    with pytest.raises(ValueError):
+        VikinArray(n_chips=0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend on the current process's (single) device: the shard_map
+# path itself, mesh of 1.
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_one_device_matches_plain_bitwise():
+    import jax
+
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.backends import VikinBackend
+    from repro.runtime.server import Engine
+    from repro.runtime.sharded import ShardedVikinBackend
+
+    model = VIKIN_ARCHS["vikin-small"]
+    params = vikin_stack_init(jax.random.key(0), model)
+    rng = np.random.default_rng(1)
+    reqs = [rng.random(model.sizes[0], dtype=np.float32) for _ in range(5)]
+
+    def serve(backend):
+        eng = Engine(backend, n_slots=4)
+        rids = [eng.submit(r) for r in reqs]
+        out = eng.run_until_done()
+        return np.stack([out[r] for r in rids]), eng.stats
+
+    y_plain, _ = serve(VikinBackend(model, params, impl="jnp"))
+    y_shard, s = serve(ShardedVikinBackend(model, params, impl="jnp",
+                                           devices=1))
+    assert np.array_equal(y_plain, y_shard)
+    # the sharded backend reports through the array model
+    assert "chip_cycles" in s and "comm_cycles" in s
+
+
+def test_sharded_rejects_more_devices_than_visible():
+    import jax
+
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.sharded import ShardedVikinBackend
+
+    model = VIKIN_ARCHS["vikin-small"]
+    params = vikin_stack_init(jax.random.key(0), model)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        ShardedVikinBackend(model, params,
+                            devices=len(jax.devices()) + 1)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: forced host devices must precede jax init -> subprocess.
+# ---------------------------------------------------------------------------
+
+SHARDED_SERVE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys, json
+    sys.path.insert(0, "src")
+    import numpy as np, jax
+    from repro.configs.vikin_models import VIKIN_ARCHS
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.backends import VikinBackend
+    from repro.runtime.sharded import ShardedVikinBackend
+    from repro.runtime.server import Engine
+
+    impl = sys.argv[1]
+    model = VIKIN_ARCHS["vikin-small"]
+    params = vikin_stack_init(jax.random.key(0), model)
+    rng = np.random.default_rng(0)
+    reqs = [rng.random(model.sizes[0], dtype=np.float32) for _ in range(10)]
+
+    def serve(backend, slots):
+        eng = Engine(backend, n_slots=slots)
+        rids = [eng.submit(r) for r in reqs]
+        out = eng.run_until_done()
+        return np.stack([out[r] for r in rids]), dict(eng.stats)
+
+    y1, s1 = serve(VikinBackend(model, params, impl=impl), 8)
+    sb = ShardedVikinBackend(model, params, impl=impl, devices=4)
+    y4, s4 = serve(sb, 8)
+    print(json.dumps({
+        "bitwise": bool(np.array_equal(y1, y4)),
+        "n_devices": len(jax.devices()),
+        "shard_buckets": {n: sb.shard_bucket(n) for n in (1, 2, 6, 8, 9)},
+        "global_buckets": {n: sb.bucket(n) for n in (1, 2, 6, 8, 9)},
+        "single_cycles": s1["sim_cycles"],
+        "multi_cycles": s4["sim_cycles"],
+        "chip_cycles": s4["chip_cycles"],
+        "comm_cycles": s4["comm_cycles"],
+        "mode_switches": [s1["mode_switches"], s4["mode_switches"]],
+    }))
+""")
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_sharded_four_devices_bitwise_and_buckets(impl):
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_SERVE_SCRIPT, impl],
+        capture_output=True, text=True, cwd=REPO, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["n_devices"] == 4
+    # THE contract: same requests, same bits, any device count
+    assert out["bitwise"] is True
+    # per-shard buckets: power-of-two, >= min_bucket, global = 4x per-shard
+    assert out["shard_buckets"] == {"1": 2, "2": 2, "6": 2, "8": 2, "9": 4}
+    assert all(out["global_buckets"][n] == 4 * b
+               for n, b in out["shard_buckets"].items())
+    # array accounting rides the engine stats: wall = chip + comm, and the
+    # 4-chip wall is cheaper than the sequential single-chip run
+    assert out["multi_cycles"] == pytest.approx(
+        out["chip_cycles"] + out["comm_cycles"])
+    assert out["multi_cycles"] < out["single_cycles"]
+    # every row pays its mode plan regardless of which chip served it
+    assert out["mode_switches"][0] == out["mode_switches"][1]
