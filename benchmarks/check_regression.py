@@ -9,7 +9,10 @@ non-zero beyond tolerance.
 
 Only DETERMINISTIC fields gate -- simulated cycles (per-request, which is
 batch-size independent by construction, DESIGN.md Sec. 11), oracle errors,
-dispatch/op/byte counts, mode plans, and the sharded bitwise-identity flag.
+dispatch/op/byte counts, mode plans, the sharded bitwise-identity flag,
+and the scheduler row's per-policy figures plus its fifo-vs-mode-affinity
+ordering (mode-affinity must stay strictly cheaper in reconfig cycles and
+no worse per-request, DESIGN.md Sec. 14).
 Wall-clock fields (``wall_*``, ``*_rps``) and training-dependent accuracy
 (``val_mse``) never gate: they vary run to run / with CI step counts.
 
@@ -136,6 +139,35 @@ def check_serving(base: Dict, fresh: Dict, f: Findings,
                    f"(bench coverage regression){hint}")
             continue
         r = fresh[name]
+        if name.startswith("sched:"):
+            # multi-workload scheduler row: per-policy deterministic sim
+            # fields, plus the ordering claims the row exists to pin --
+            # mode-affinity must strictly beat fifo on reconfiguration and
+            # never pay for it in per-request cycles, with outputs bitwise
+            # identical to single-request serving under BOTH policies.
+            if r.get("bitwise_identical") is not True:
+                f.fail(f"{name}.bitwise_identical",
+                       "scheduled batched outputs no longer bitwise-"
+                       "identical to single-request serving")
+            for pol in ("fifo", "mode-affinity"):
+                bp = b["policies"][pol]
+                rp = r.get("policies", {}).get(pol, {})
+                for k in ("sim_cycles_per_req", "reconfig_cycles_per_req"):
+                    _cmp(f, f"{name}.{pol}.{k}", bp[k], rp.get(k), rtol)
+            rf = r.get("policies", {}).get("fifo", {})
+            ra = r.get("policies", {}).get("mode-affinity", {})
+            if not (ra.get("reconfig_cycles", float("inf"))
+                    < rf.get("reconfig_cycles", 0)):
+                f.fail(f"{name}.reconfig_cycles",
+                       f"mode-affinity ({ra.get('reconfig_cycles')}) no "
+                       f"longer strictly below fifo "
+                       f"({rf.get('reconfig_cycles')})")
+            if (ra.get("sim_cycles_per_req", float("inf"))
+                    > rf.get("sim_cycles_per_req", 0.0) * (1 + rtol)):
+                f.fail(f"{name}.sim_cycles_per_req",
+                       f"mode-affinity ({ra.get('sim_cycles_per_req')}) "
+                       f"exceeds fifo ({rf.get('sim_cycles_per_req')})")
+            continue
         if name.startswith("sharded:"):
             if r.get("devices") != b["devices"]:
                 f.fail(f"{name}.devices", f"{b['devices']} -> "

@@ -92,6 +92,16 @@ def main() -> None:
             f"sim_cycles_per_req={r['sim_cycles_per_req']:.0f};"
             f"switches={r['mode_switches']}"))
     for key, r in sv.items():
+        # fifo-vs-mode-affinity scheduler row (DESIGN.md Sec. 14)
+        if key.startswith("sched:"):
+            fifo = r["policies"]["fifo"]
+            aff = r["policies"]["mode-affinity"]
+            rows.append((
+                "sched_fifo_vs_affinity",
+                r["reconfig_reduction"],
+                f"fifo_reconfig={fifo['reconfig_cycles']:.0f};"
+                f"affinity_reconfig={aff['reconfig_cycles']:.0f};"
+                f"bitwise={r['bitwise_identical']}"))
         # trained dense-vs-sparse pipeline row (DESIGN.md Sec. 12)
         if key.startswith("trained:"):
             rows.append((

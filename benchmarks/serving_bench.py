@@ -5,6 +5,15 @@ Drives the continuous-batching engine (runtime/server.Engine) over the
 simulated VIKIN figures (cycles, latency, mode switches) -- the serving-path
 analogue of the per-kernel BENCH_kernels.json trajectory.
 
+It also emits a ``sched:*`` row (DESIGN.md Sec. 14): an interleaved
+KAN/MLP request stream served from one multi-workload engine under the
+``fifo`` baseline and the ``mode-affinity`` batch policy, side by side --
+the policies' ``reconfig_cycles`` and ``sim_cycles_per_req`` are the
+paper's "minimal reconfiguration overhead" claim measured at the
+scheduling layer, and the row records that batched outputs stay bitwise
+identical to single-request serving for every workload under both
+policies.
+
 It also emits a ``trained:*`` row (train -> calibrate -> serve, DESIGN.md
 Sec. 12): the same trained stack served dense and two-stage-sparsified, with
 served-output accuracy and simulated cycles side by side -- the paper's
@@ -72,6 +81,82 @@ def serve_burst(arch: str, *, n_requests: int = 32, n_slots: int = 8,
         "mode_switches": int(s["mode_switches"]),
         "reconfig_cycles": s["reconfig_cycles"],
         "mode_plan": backend.plan.summary()["segments"],
+    }
+
+
+def sched_fifo_vs_affinity(archs=("vikin-kan2", "vikin-mlp3"), *,
+                           n_requests: int = 32, n_slots: int = 8,
+                           impl: str = "auto", seed: int = 0) -> Dict:
+    """Serve one interleaved multi-workload stream under both policies.
+
+    The stream alternates the archs request by request -- the adversarial
+    arrival order for the reconfiguration schedule: strict FIFO degenerates
+    to singleton same-workload batches and pays a mode flip on nearly every
+    tick, while mode-affinity groups same-ExecMode work and amortizes
+    ``RECONFIG_CYCLES`` across the whole run.  Also pins, per policy, that
+    batched outputs stay bitwise identical to single-request serving for
+    every workload (the determinism contract survives the scheduler).
+    """
+    from repro.runtime.backends import MultiWorkloadBackend
+
+    models = {a: VIKIN_ARCHS[a] for a in archs}
+    params = {a: vikin_stack_init(jax.random.key(seed), m)
+              for a, m in models.items()}
+    rng = np.random.default_rng(seed)
+    stream = [(archs[i % len(archs)],
+               rng.random(models[archs[i % len(archs)]].sizes[0],
+                          dtype=np.float32))
+              for i in range(n_requests)]
+
+    # single-request references, one engine per arch, one request at a time
+    singles: Dict[int, np.ndarray] = {}
+    for a in archs:
+        eng = Engine(VikinBackend(models[a], params[a], impl=impl),
+                     n_slots=n_slots)
+        for i, (arch, x) in enumerate(stream):
+            if arch != a:
+                continue
+            rid = eng.submit(x)
+            singles[i] = eng.run_until_done()[rid]
+
+    def serve(policy: str):
+        backend = MultiWorkloadBackend(
+            {a: VikinBackend(models[a], params[a], impl=impl)
+             for a in archs})
+        eng = Engine(backend, n_slots=n_slots, policy=policy)
+        rids = [eng.submit(x, workload=a) for a, x in stream]
+        out = eng.run_until_done()
+        bitwise = all(np.array_equal(out[rid], singles[i])
+                      for i, rid in enumerate(rids))
+        s = eng.stats
+        served = max(s["served"], 1)
+        return {
+            "requests": int(s["served"]),
+            "batches": int(s["ticks"]),
+            "bitwise_identical_to_single": bool(bitwise),
+            "sim_cycles_per_req": s["sim_cycles"] / served,
+            "reconfig_cycles": s["reconfig_cycles"],
+            "reconfig_cycles_per_req": s["reconfig_cycles"] / served,
+            "mode_switches": int(s["mode_switches"]),
+            "wall_rps": s["served"] / s["wall_s"] if s["wall_s"] else 0.0,
+            "p95_queue_wait_sim_s": s.get("p95_queue_wait_sim_s", 0.0),
+            "p95_service_sim_s": s.get("p95_service_sim_s", 0.0),
+        }
+
+    fifo = serve("fifo")
+    affinity = serve("mode-affinity")
+    return {
+        "archs": list(archs),
+        "requests": n_requests,
+        "n_slots": n_slots,
+        "policies": {"fifo": fifo, "mode-affinity": affinity},
+        "bitwise_identical": (fifo["bitwise_identical_to_single"]
+                              and affinity["bitwise_identical_to_single"]),
+        "reconfig_reduction": (fifo["reconfig_cycles"]
+                               / max(affinity["reconfig_cycles"], 1e-9)),
+        "cycle_ratio_affinity_vs_fifo": (
+            affinity["sim_cycles_per_req"]
+            / max(fifo["sim_cycles_per_req"], 1e-9)),
     }
 
 
@@ -193,6 +278,9 @@ def run(n_requests: int = 32, n_slots: int = 8,
     gracefully off CI)."""
     results = {a: serve_burst(a, n_requests=n_requests, n_slots=n_slots)
                for a in archs}
+    sched_archs = ("vikin-kan2", "vikin-mlp3")
+    results[f"sched:{'+'.join(sched_archs)}"] = sched_fifo_vs_affinity(
+        sched_archs, n_requests=n_requests, n_slots=n_slots)
     if devices == 0:
         devices = len(jax.devices()) if len(jax.devices()) > 1 else 1
     if devices > 1:
@@ -242,6 +330,15 @@ def main() -> None:
                   devices=args.devices)
     print("arch,requests,wall_rps,sim_cycles_per_req,sim_rps,mode_switches")
     for a, r in results.items():
+        if a.startswith("sched:"):
+            f, m = r["policies"]["fifo"], r["policies"]["mode-affinity"]
+            print(f"{a}: fifo {f['reconfig_cycles']:.0f} reconfig cyc / "
+                  f"{f['sim_cycles_per_req']:.0f} cyc/req -> mode-affinity "
+                  f"{m['reconfig_cycles']:.0f} / "
+                  f"{m['sim_cycles_per_req']:.0f} "
+                  f"({r['reconfig_reduction']:.1f}x fewer reconfig cycles, "
+                  f"bitwise_identical={r['bitwise_identical']})")
+            continue
         if a.startswith("sharded:"):
             print(f"{a}: {r['devices']} devices, bitwise_identical="
                   f"{r['bitwise_identical']}, "

@@ -312,30 +312,48 @@ def serving_report(
     *,
     batch: int = 1,
     array: Optional[VikinArray] = None,
+    prev_mode=None,
 ) -> dict:
     """One served batch's simulated-hardware accounting (runtime backends).
 
     Without ``array`` (the single-chip engine), batch rows stream
-    sequentially (run_model), so cycles scale linearly in ``batch``, each
-    row pays the mode plan, and per-request attribution is
-    ``sim_cycles / batch`` -- batch-size independent.
+    sequentially (run_model), so compute cycles scale linearly in
+    ``batch`` and each row pays the mode plan.
+
+    Mode flips follow the carry-over contract (DESIGN.md Sec. 14,
+    ``ModePlan.stream_switches``): the interconnect stays in whatever mode
+    the previous row -- or, via ``prev_mode``, the previous served batch --
+    left it, so boundary flips between rows of a first!=last plan and the
+    entry flip into a batch whose first mode disagrees with the carried
+    mode are charged on top of the per-row internal schedule.
+    ``prev_mode=None`` is a cold start (no entry charge), and the report
+    carries the closing mode out as ``exit_mode`` (an ExecMode, popped by
+    the engine before numeric aggregation) so the caller can thread it into
+    the next batch's report.
 
     With ``array``, rows are split evenly over ``array.n_chips`` chips that
     compute in parallel: ``sim_cycles`` becomes the array's WALL cycles
     (max per-chip compute + host scatter/gather), reported next to the
     per-chip compute (``chip_cycles``) and transfer (``comm_cycles``)
-    breakdown.  Mode-switch totals stay per-row (every row pays its plan on
-    its own chip), so they match the single-chip report for the same batch.
+    breakdown.  Mode-switch TOTALS stay per-row-stream attribution (every
+    row pays its plan; flip totals are chip-count independent, test-pinned)
+    while the wall clock charges each chip its own row stream's flips.
     """
     plan = ModePlan.for_layers([w.kind for w in layers])
     batch = max(batch, 1)
+    switches, exit_mode = plan.stream_switches(batch, prev_mode)
     out = {
-        "mode_switches": float(plan.n_switches * batch),
-        "reconfig_cycles": float(plan.reconfig_cycles * batch),
+        "mode_switches": float(switches),
+        "reconfig_cycles": float(switches * RECONFIG_CYCLES),
     }
+    if exit_mode is not None:
+        out["exit_mode"] = exit_mode
     if array is None:
         rep = run_model(layers, hw, batch=batch)
-        out.update(sim_cycles=rep.cycles, sim_latency_s=rep.latency_s,
+        # flips beyond the per-row internal schedule run_model charges
+        extra = switches - plan.n_switches * batch
+        cycles = rep.cycles + extra * RECONFIG_CYCLES
+        out.update(sim_cycles=cycles, sim_latency_s=cycles / hw.clock_hz,
                    sim_macs=rep.macs)
         return out
     if array.hw != hw:
@@ -343,17 +361,23 @@ def serving_report(
             "serving_report: array.hw disagrees with the hw argument; "
             "build the VikinArray with the chip model you are reporting "
             "against (the array's hw is what the chips run)")
-    chip = run_model(layers, array.hw, batch=array.rows_per_chip(batch))
+    rows = array.rows_per_chip(batch)
+    chip = run_model(layers, array.hw, batch=rows)
+    # wall clock: the slowest chip replays ``rows`` back-to-back instances,
+    # so it pays that stream's boundary/entry flips locally
+    chip_extra, _ = plan.stream_switches(rows, prev_mode)
+    chip_extra -= plan.n_switches * rows
+    chip_cycles = chip.cycles + chip_extra * RECONFIG_CYCLES
     comm = array.comm_cycles(batch, layers[0].n_in, layers[-1].n_out)
-    cycles = chip.cycles + comm
+    cycles = chip_cycles + comm
     out.update(
         sim_cycles=cycles,
         sim_latency_s=cycles / array.hw.clock_hz,
         # all chips together issue every row's MACs, not just the slowest
         # chip's share (n_chips itself is static config, not a per-batch
         # quantity, so it stays out of this additive report)
-        sim_macs=chip.macs / array.rows_per_chip(batch) * batch,
-        chip_cycles=chip.cycles,
+        sim_macs=chip.macs / rows * batch,
+        chip_cycles=chip_cycles,
         comm_cycles=comm,
     )
     return out

@@ -16,6 +16,15 @@ types with shared kernels, which is the analogue of reusing silicon.
 inspects the workload (a sequence of layer kinds) and issues the mode switch
 schedule, charging a reconfiguration overhead whenever the mode flips.
 
+``ModePlan.stream_switches`` extends that schedule across BATCH boundaries
+(the cross-tick carry-over contract, DESIGN.md Sec. 14): the interconnect
+stays in whatever mode the previous instance left it, so back-to-back
+instances of a same-mode plan charge zero reconfiguration, while entering a
+plan whose first layer disagrees with the carried mode pays one extra flip.
+The serving engine (runtime/server.Engine) threads the carried mode through
+``serving_report(prev_mode=...)`` tick to tick, which is what makes the
+mode-affinity scheduler's grouping (runtime/scheduler.py) worth cycles.
+
 Implements the mode-schedule serving contract of DESIGN.md Sec. 11 (each
 served workload carries its ModePlan; RECONFIG_CYCLES charged per flip per
 served instance) on top of the pipeline/parallel dataflows of Sec. 2 and 7.
@@ -24,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 class ExecMode(enum.Enum):
@@ -64,6 +73,38 @@ class ModePlan:
     @property
     def reconfig_cycles(self) -> int:
         return self.n_switches * RECONFIG_CYCLES
+
+    @property
+    def first_mode(self) -> Optional[ExecMode]:
+        return self.modes[0] if self.modes else None
+
+    @property
+    def last_mode(self) -> Optional[ExecMode]:
+        return self.modes[-1] if self.modes else None
+
+    def stream_switches(
+        self, batch: int, prev_mode: Optional[ExecMode] = None,
+    ) -> Tuple[int, Optional[ExecMode]]:
+        """Total interconnect flips for ``batch`` back-to-back instances of
+        this plan entered from ``prev_mode``, and the mode the engine is
+        left in.
+
+        ``prev_mode=None`` is a cold start: the first instance configures a
+        blank interconnect, which is setup, not a reconfiguration -- no
+        entry charge.  Between consecutive instances the interconnect
+        carries over, so a plan whose last layer's mode differs from its
+        first pays one boundary flip per instance boundary; a homogeneous
+        plan entered from its own mode pays nothing at all (the carry-over
+        contract the mode-affinity scheduler amortizes, DESIGN.md Sec. 14).
+        """
+        if not self.modes or batch <= 0:
+            return 0, prev_mode
+        sw = self.n_switches * batch
+        if prev_mode is not None and prev_mode is not self.first_mode:
+            sw += 1
+        if self.last_mode is not self.first_mode:
+            sw += batch - 1
+        return sw, self.last_mode
 
     def segments(self) -> List[Tuple[ExecMode, int]]:
         """Run-length encoding: [(mode, n_layers), ...]."""

@@ -38,6 +38,8 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils import next_pow2 as _next_pow2
+
 CACHE_SCHEMA_VERSION = 1
 
 # VMEM budget used to prune candidate tiles (bytes, conservative half of the
@@ -66,10 +68,6 @@ def default_cache_path() -> str:
                         "autotune.json")
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, int(n - 1).bit_length())
-
-
 def shape_bucket(dims: Sequence[int]) -> Tuple[int, ...]:
     """Round every dim up to the next power of two (>= 1)."""
     return tuple(_next_pow2(max(1, int(d))) for d in dims)
@@ -88,29 +86,44 @@ class AutotuneCache:
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
         self._data: Optional[Dict[str, Dict]] = None
+        self._discard_disk = False      # set by clear(): next save resets
 
     # -- persistence -------------------------------------------------------
+    def _read_disk(self) -> Dict[str, Dict]:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            if raw.get("schema") == CACHE_SCHEMA_VERSION:
+                return dict(raw.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        return {}
+
     def _load(self) -> Dict[str, Dict]:
         if self._data is None:
-            try:
-                with open(self.path) as f:
-                    raw = json.load(f)
-                if raw.get("schema") == CACHE_SCHEMA_VERSION:
-                    self._data = dict(raw.get("entries", {}))
-                else:
-                    self._data = {}
-            except (OSError, ValueError):
-                self._data = {}
+            self._data = self._read_disk()
         return self._data
 
     def save(self) -> None:
         data = self._load()
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        # Re-read and merge the on-disk entries before writing: this
+        # process's in-memory view may predate entries another process
+        # (concurrent CI job, sharded run) persisted since our first load,
+        # and rewriting only our view would silently drop theirs.  Our own
+        # entries win on key conflicts (they carry this process's fresher
+        # timing).  The tmp+rename below keeps every write atomic; the
+        # read->rename window is not locked, so two processes racing on the
+        # SAME key still last-write-wins -- but disjoint keys (the CI case)
+        # are never lost.
+        disk = {} if self._discard_disk else self._read_disk()
+        merged = {**disk, **data}
+        self._data, self._discard_disk = merged, False
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             # allow_nan=False keeps the file strict RFC-8259 JSON (readable
             # by jq / JS / strict parsers), not just Python-round-trippable.
-            json.dump({"schema": CACHE_SCHEMA_VERSION, "entries": data},
+            json.dump({"schema": CACHE_SCHEMA_VERSION, "entries": merged},
                       f, indent=1, sort_keys=True, allow_nan=False)
         os.replace(tmp, self.path)
 
@@ -129,7 +142,11 @@ class AutotuneCache:
             self.save()
 
     def clear(self) -> None:
+        """Reset to empty: the next save() overwrites rather than merges
+        (an explicit reset is the one case where dropping the on-disk
+        entries is the point)."""
         self._data = {}
+        self._discard_disk = True
 
 
 _GLOBAL_CACHE: Optional[AutotuneCache] = None

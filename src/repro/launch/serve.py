@@ -12,6 +12,18 @@ request, and report simulated VIKIN cycles next to wall-clock:
   PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
       --requests 8 --slots 4 --impl pallas_interpret
 
+A comma list of vikin archs serves SEVERAL workloads from one engine
+process (runtime/backends.MultiWorkloadBackend) under a mode-aware batch
+policy (runtime/scheduler.py, DESIGN.md Sec. 14): ``--policy
+mode-affinity`` (default) groups same-ExecMode work so reconfiguration is
+amortized across requests, ``--policy fifo`` is the strict arrival-order
+baseline.  Requests are submitted round-robin across the archs -- the
+adversarial interleaving for the reconfiguration schedule:
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch vikin-kan2,vikin-mlp3,vikin-mixed --policy mode-affinity \
+      --requests 12 --slots 4 --impl pallas_interpret
+
 ``--ckpt`` points a vikin arch at a sparsified checkpoint produced by
 ``launch/train.py --arch vikin-*`` (params + calibrated two-stage masks,
 DESIGN.md Sec. 12), so served outputs and simulated cycles reflect the
@@ -35,17 +47,12 @@ from __future__ import annotations
 import argparse
 
 
-def _serve_vikin(args, model):
+def _make_vikin_backend(args, model):
     import jax
-    import numpy as np
 
-    from repro.checkpoint import restore_checkpoint, restore_masks
     from repro.models.ffn import vikin_stack_init
     from repro.runtime.backends import VikinBackend
-    from repro.runtime.server import Engine
 
-    if args.scale == "smoke":
-        model = model.reduce()
     params = vikin_stack_init(jax.random.key(0), model)
     masks = None
     # accept --ckpt-dir too: train.py writes through that flag, and serving
@@ -53,6 +60,7 @@ def _serve_vikin(args, model):
     # silently wrong benchmark
     ckpt = args.ckpt or args.ckpt_dir
     if ckpt:
+        from repro.checkpoint import restore_checkpoint, restore_masks
         # trained + sparsified checkpoint (launch/train.py --arch vikin-*):
         # params restored into the init tree's structure, masks bit-exact
         params, step, extra = restore_checkpoint(ckpt, params)
@@ -77,32 +85,69 @@ def _serve_vikin(args, model):
               f"at full occupancy")
     else:
         backend = VikinBackend(model, params, impl=args.impl, masks=masks)
-    eng = Engine(backend, n_slots=args.slots)
-
     plan = backend.plan.summary()
     print(f"arch {model.name}: layers={list(model.layer_kinds)} "
           f"sizes={list(model.sizes)} pattern_rate={model.pattern_rate}")
     print(f"mode plan: {plan['segments']} "
           f"({plan['n_switches']} switches, "
           f"{plan['reconfig_cycles']} reconfig cycles/inference)")
+    return backend
+
+
+def _serve_vikin(args, models):
+    import numpy as np
+
+    from repro.runtime.backends import MultiWorkloadBackend
+    from repro.runtime.server import Engine
+
+    models = [m.reduce() if args.scale == "smoke" else m for m in models]
+    multi = len(models) > 1
+    if multi and (args.ckpt or args.ckpt_dir):
+        raise SystemExit(
+            "--ckpt restores ONE trained model; serve a single --arch with "
+            "it (a multi-workload engine would silently pair the "
+            "checkpoint with every arch)")
+    backends = {m.name: _make_vikin_backend(args, m) for m in models}
+    if multi:
+        backend = MultiWorkloadBackend(backends)
+        print(f"multi-workload scheduler: {sorted(backends)} "
+              f"under policy {args.policy!r}")
+    else:
+        backend = next(iter(backends.values()))
+    eng = Engine(backend, n_slots=args.slots, policy=args.policy)
 
     rng = np.random.default_rng(0)
-    n_in = model.sizes[0]
-    for _ in range(args.requests):
-        eng.submit(rng.random(n_in, dtype=np.float32))
+    rids = {}
+    # interleave the workloads round-robin: the adversarial arrival order
+    # for the mode-affinity policy to untangle
+    for i in range(args.requests):
+        m = models[i % len(models)]
+        rids[eng.submit(rng.random(m.sizes[0], dtype=np.float32),
+                        workload=m.name if multi else None)] = m.name
     out = eng.run_until_done()
     for rid in sorted(out):
         y = out[rid]
-        print(f"req {rid}: out[{y.shape[0]}] mean={float(y.mean()):+.4f}")
+        print(f"req {rid} [{rids[rid]}]: out[{y.shape[0]}] "
+              f"mean={float(y.mean()):+.4f}")
 
     s, tp = eng.stats, eng.throughput()
-    print(f"\n{int(s['served'])} requests in {int(s['ticks'])} batches: "
+    print(f"\n{int(s['served'])} requests in {int(s['ticks'])} batches "
+          f"(policy {eng.policy.name}): "
           f"wall {s['wall_s']*1e3:.1f} ms ({tp.get('wall_rps', 0):.1f} req/s)")
     print(f"simulated VIKIN: {s['sim_cycles']:.0f} cycles, "
           f"{s['sim_latency_s']*1e6:.1f} us "
           f"({tp.get('sim_rps', 0):.0f} req/s), "
           f"{int(s['mode_switches'])} mode switches "
           f"({s['reconfig_cycles']:.0f} reconfig cycles)")
+    print(f"latency: queue-wait p50 {s.get('p50_queue_wait_wall_s', 0)*1e3:.2f} ms "
+          f"/ p95 {s.get('p95_queue_wait_wall_s', 0)*1e3:.2f} ms wall, "
+          f"p95 {s.get('p95_queue_wait_sim_s', 0)*1e6:.1f} us sim; "
+          f"service p95 {s.get('p95_service_wall_s', 0)*1e3:.2f} ms wall")
+    for name, ws in sorted(eng.per_workload_stats().items()):
+        print(f"  workload {name}: {int(ws.get('served', 0))} served in "
+              f"{int(ws.get('batches', 0))} batches, "
+              f"{ws.get('sim_cycles', 0):.0f} sim cycles, "
+              f"{ws.get('reconfig_cycles', 0):.0f} reconfig cycles")
     if "chip_cycles" in s:
         print(f"  array: {args.devices} chips, "
               f"{s['chip_cycles']:.0f} per-chip compute cycles + "
@@ -147,7 +192,15 @@ def _serve_transformer(args, cfg):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", required=True,
+                    help="one arch id, or a comma list of vikin-* archs "
+                         "served together by the multi-workload scheduler "
+                         "(e.g. vikin-kan2,vikin-mlp3,vikin-mixed)")
+    ap.add_argument("--policy", default="mode-affinity",
+                    choices=["fifo", "mode-affinity"],
+                    help="batch-formation policy (runtime/scheduler.py); "
+                         "fifo is the bit-compatible arrival-order "
+                         "baseline")
     ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--ckpt-dir", default=None,
                     help="transformer archs: restore params from here")
@@ -169,19 +222,26 @@ def main():
 
     from repro.configs.registry import get_serving_config
 
+    names = [a.strip() for a in args.arch.split(",") if a.strip()]
     try:
-        family, cfg = get_serving_config(args.arch)
+        resolved = [get_serving_config(n) for n in names]
     except KeyError as e:
         raise SystemExit(str(e.args[0]))
-    if family == "vikin":
-        _serve_vikin(args, cfg)
+    families = {fam for fam, _ in resolved}
+    if len(names) > 1 and families != {"vikin"}:
+        raise SystemExit(
+            f"multi-workload serving (--arch a,b,c) is vikin-only "
+            f"(runtime/scheduler.py); got families {sorted(families)}. "
+            f"Serve one transformer arch at a time")
+    if families == {"vikin"}:
+        _serve_vikin(args, [cfg for _, cfg in resolved])
     else:
         if args.devices > 1:
             raise SystemExit(
                 f"--devices is vikin-only (runtime/sharded); serving "
                 f"{args.arch!r} would silently run single-device. Drop "
                 f"the flag or serve a vikin-* workload")
-        _serve_transformer(args, cfg)
+        _serve_transformer(args, resolved[0][1])
 
 
 if __name__ == "__main__":

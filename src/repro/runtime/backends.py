@@ -16,6 +16,12 @@ lives behind the ``ModelBackend`` protocol:
 ``TransformerBackend`` is the previous Server body (autoregressive decode
 over slot KV caches) moved behind the protocol, unchanged.
 
+``MultiWorkloadBackend`` dispatches the same protocol across several named
+VIKIN workloads (``--arch a,b,c``): per-workload state lanes, per-request
+``workload`` routing, and per-workload ModePlan/cycle accounting, so one
+engine process serves a mixed KAN/MLP request population under the
+mode-aware batch policies of runtime/scheduler.py.
+
 ``VikinBackend`` serves the paper's stacked KAN/MLP feed-forward workloads
 (configs/vikin_models.PaperModelConfig): a request is one feature vector,
 the batched step pads active slots into a power-of-two shape bucket and runs
@@ -36,12 +42,13 @@ DESIGN.md Sec. 12.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.engine import VikinHW, serving_report
-from repro.core.modes import ModePlan
+from repro.core.modes import ExecMode, ModePlan
+from repro.utils import next_pow2 as _next_pow2
 
 
 @dataclasses.dataclass
@@ -52,6 +59,14 @@ class Request:
     backends, a float feature vector for feed-forward (VIKIN) backends.
     Token backends append into ``generated``; one-shot backends set
     ``output``.  ``result()`` returns whichever the backend produced.
+
+    Scheduling fields (runtime/scheduler.py): ``priority`` (higher is more
+    urgent; ties broken by arrival), ``deadline_s`` (wall-clock budget from
+    submission; the engine counts misses in ``stats["deadline_misses"]``
+    and stamps ``met_deadline``), and ``workload`` (which of a
+    MultiWorkloadBackend's models serves this request; None for
+    single-workload engines).  The ``t_*``/``sim_*`` stamps feed the
+    engine's queue-wait / service-latency percentiles in both clocks.
     """
 
     rid: int
@@ -61,6 +76,16 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     output: Optional[np.ndarray] = None
     done: bool = False
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    workload: Optional[str] = None
+    met_deadline: Optional[bool] = None
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_done: float = 0.0
+    sim_submit: float = 0.0
+    sim_admit: float = 0.0
+    sim_done: float = 0.0
 
     def result(self):
         return self.generated if self.output is None else self.output
@@ -88,8 +113,18 @@ class ModelBackend:
         """
         raise NotImplementedError
 
-    def batch_report(self, n_active: int) -> Optional[Dict[str, float]]:
-        """Simulated-hardware stats for the step just run, or None."""
+    def batch_report(self, n_active: int,
+                     prev_mode: Optional[ExecMode] = None,
+                     ) -> Optional[Dict[str, float]]:
+        """Simulated-hardware stats for the step just run, or None.
+
+        ``prev_mode`` is the interconnect mode the PREVIOUS served batch
+        left the engine in (None = cold start); backends with a cycle model
+        charge the carry-over entry flip against it and hand the closing
+        mode back under the ``"exit_mode"`` key (an ExecMode the engine
+        pops before numeric aggregation) -- the cross-tick mode carry-over
+        contract of DESIGN.md Sec. 14.
+        """
         return None
 
 
@@ -179,10 +214,6 @@ class TransformerBackend(ModelBackend):
 # ---------------------------------------------------------------------------
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, (n - 1)).bit_length()
-
-
 class VikinBackend(ModelBackend):
     """Serve a PaperModelConfig KAN/MLP stack through the fused kernels.
 
@@ -217,7 +248,8 @@ class VikinBackend(ModelBackend):
             self.layers = model.layer_works(nnz_rates)
         self.n_in = int(model.sizes[0])
         self._fwd = jax.jit(self.forward_fn())
-        self._report_cache: Dict[int, Dict[str, float]] = {}
+        self._report_cache: Dict[Tuple[int, Optional[ExecMode]],
+                                 Dict[str, float]] = {}
         self.n_slots = None
 
     def forward_fn(self):
@@ -272,13 +304,118 @@ class VikinBackend(ModelBackend):
             slot_req[s].done = True
         return inputs
 
-    def batch_report(self, n_active: int) -> Dict[str, float]:
+    def batch_report(self, n_active: int,
+                     prev_mode: Optional[ExecMode] = None,
+                     ) -> Dict[str, float]:
         """VIKIN cycle model for one served batch (batches stream
-        sequentially through the single engine instance, so cycles scale
-        linearly in n_active and every batch pays the mode plan once per
-        instance).  ``self.array`` (set by ShardedVikinBackend) swaps in
-        the multi-chip report."""
-        if n_active not in self._report_cache:
-            self._report_cache[n_active] = serving_report(
-                self.layers, self.hw, batch=n_active, array=self.array)
-        return dict(self._report_cache[n_active])
+        sequentially through the single engine instance, so compute cycles
+        scale linearly in n_active and every instance pays its mode plan).
+        ``prev_mode`` is the carried interconnect state from the previous
+        batch (DESIGN.md Sec. 14): entering from a disagreeing mode costs
+        one extra RECONFIG_CYCLES flip, and the report's ``exit_mode``
+        hands the closing state back to the engine.  ``self.array`` (set
+        by ShardedVikinBackend) swaps in the multi-chip report."""
+        key = (n_active, prev_mode)
+        if key not in self._report_cache:
+            self._report_cache[key] = serving_report(
+                self.layers, self.hw, batch=n_active, array=self.array,
+                prev_mode=prev_mode)
+        return dict(self._report_cache[key])
+
+
+# ---------------------------------------------------------------------------
+# Multi-workload dispatch -- several VIKIN models behind one engine.
+# ---------------------------------------------------------------------------
+
+
+class MultiWorkloadBackend(ModelBackend):
+    """Serve several named workloads (``--arch a,b,c``) from one engine.
+
+    Wraps a dict of per-workload backends behind the single ModelBackend
+    protocol: every request carries a ``workload`` name, per-workload state
+    lanes are kept side by side (input widths differ across models), and
+    ``step`` runs one batched forward per workload present among the active
+    slots.  The batch policy (runtime/scheduler.py) keeps each tick's
+    admitted set single-workload, so in steady state a tick is exactly one
+    sub-backend forward -- the grouping that lets the mode carry-over
+    contract amortize ``RECONFIG_CYCLES`` across requests.
+
+    ``batch_report`` threads the carried interconnect mode through the
+    sub-backends in the order they executed and accumulates a per-workload
+    view (``workload_stats``: served / batches / sim cycles / mode flips
+    per workload) next to the engine's global stats.
+    """
+
+    def __init__(self, backends: Dict[str, ModelBackend]):
+        if not backends:
+            raise ValueError("MultiWorkloadBackend needs >= 1 workload")
+        self.backends = dict(backends)
+        self.plans: Dict[str, ModePlan] = {
+            n: b.plan for n, b in self.backends.items()
+            if hasattr(b, "plan")}
+        self.workload_stats: Dict[str, Dict[str, float]] = {
+            n: {} for n in self.backends}
+        self._last_served: List[Tuple[str, int]] = []
+
+    def bucket_for(self, workload: str, n_active: int) -> int:
+        """Padding bucket the named workload would run ``n_active``
+        requests in (scheduler's zero-padding-waste signal)."""
+        b = self.backends[workload]
+        return b.bucket(n_active) if hasattr(b, "bucket") else n_active
+
+    def init_state(self, n_slots: int, max_len: int):
+        return {n: b.init_state(n_slots, max_len)
+                for n, b in self.backends.items()}
+
+    def validate(self, req: Request) -> None:
+        if req.workload not in self.backends:
+            raise ValueError(
+                f"request {req.rid}: unknown workload {req.workload!r}; "
+                f"this engine serves {sorted(self.backends)}")
+        self.backends[req.workload].validate(req)
+
+    def prefill(self, state, slot: int, req: Request):
+        state = dict(state)
+        state[req.workload] = self.backends[req.workload].prefill(
+            state[req.workload], slot, req)
+        return state
+
+    def step(self, state, slot_req: Sequence[Optional[Request]]):
+        state = dict(state)
+        order: List[str] = []
+        for r in slot_req:
+            if r is not None and r.workload not in order:
+                order.append(r.workload)
+        self._last_served = []
+        for name in order:
+            view = [r if (r is not None and r.workload == name) else None
+                    for r in slot_req]
+            state[name] = self.backends[name].step(state[name], view)
+            active = [r for r in view if r is not None]
+            # completions counted off req.done, not slot-steps, so the
+            # per-workload served totals stay correct for multi-tick
+            # (token) sub-backends too
+            self._last_served.append(
+                (name, len(active), sum(1 for r in active if r.done)))
+        return state
+
+    def batch_report(self, n_active: int,
+                     prev_mode: Optional[ExecMode] = None,
+                     ) -> Optional[Dict[str, float]]:
+        total: Dict[str, float] = {}
+        mode = prev_mode
+        for name, k, n_done in self._last_served:
+            rep = self.backends[name].batch_report(k, prev_mode=mode)
+            ws = self.workload_stats[name]
+            ws["served"] = ws.get("served", 0.0) + n_done
+            ws["batches"] = ws.get("batches", 0.0) + 1
+            if rep is None:
+                continue
+            rep = dict(rep)
+            mode = rep.pop("exit_mode", mode)
+            for key, v in rep.items():
+                total[key] = total.get(key, 0.0) + v
+                ws[key] = ws.get(key, 0.0) + v
+        if mode is not None:
+            total["exit_mode"] = mode
+        return total if total else None

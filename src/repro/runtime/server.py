@@ -1,18 +1,26 @@
 """Backend-agnostic continuous-batching engine with slot-based state lanes.
 
 Continuous-batching-lite: the engine owns ``n_slots`` state lanes; incoming
-requests claim free slots, every engine tick runs ONE batched backend step
-for all active slots (the batch dimension is the slot array), finished slots
-are recycled.  What a "step" means belongs to the ModelBackend
-(runtime/backends.py): one decoded token per active slot for transformers,
-one whole feed-forward inference per active slot for VIKIN KAN/MLP stacks.
-This is the vLLM-style execution contract scaled down to what one process
-can test: slot reuse, padding correctness, per-request determinism (batched
-output == single-request output, test-pinned).
+requests wait in per-workload queues, a pluggable ``BatchPolicy``
+(runtime/scheduler.py) picks which of them form each tick's batch, every
+engine tick runs ONE batched backend step for all active slots (the batch
+dimension is the slot array), and finished slots are recycled -- then
+re-admission runs immediately, so a saturated queue keeps all ``n_slots``
+busy instead of idling freed slots until the next tick.  What a "step"
+means belongs to the ModelBackend (runtime/backends.py): one decoded token
+per active slot for transformers, one whole feed-forward inference per
+active slot for VIKIN KAN/MLP stacks.  This is the vLLM-style execution
+contract scaled down to what one process can test: slot reuse, padding
+correctness, per-request determinism (batched output == single-request
+output, test-pinned).
 
 The engine also aggregates the backend's per-batch simulated-hardware
 reports (VIKIN cycles / latency / mode switches) into ``stats`` alongside
-wall-clock, so serving throughput can be read in both clocks.
+wall-clock, threads the simulated interconnect mode from batch to batch
+(the carry-over contract of DESIGN.md Sec. 14 -- ``self.hw_mode``), and
+records per-request queue-wait and service latency in BOTH clocks, exposed
+as percentiles via ``latency_stats()`` / merged into ``stats`` by
+``run_until_done``.
 """
 from __future__ import annotations
 
@@ -26,77 +34,208 @@ from repro.runtime.backends import (      # noqa: F401  (Request re-export)
     Request,
     TransformerBackend,
 )
+from repro.runtime.scheduler import BatchPolicy, SchedContext, get_policy
+
+
+class IncompleteRunError(RuntimeError):
+    """``run_until_done`` hit ``max_ticks`` with work still in flight.
+
+    Nothing is dropped: finished results are on ``.completed`` and every
+    request (finished or not) stays queued in the engine, so a follow-up
+    ``run_until_done`` call with more ticks returns the full result set.
+    """
+
+    def __init__(self, pending: List[int], completed: Dict[int, list]):
+        self.pending = sorted(pending)
+        self.completed = completed
+        super().__init__(
+            f"run_until_done: {len(self.pending)} request(s) still "
+            f"unfinished after max_ticks (rids {self.pending[:8]}"
+            f"{'...' if len(self.pending) > 8 else ''}); "
+            f"{len(completed)} completed result(s) preserved on "
+            f".completed -- call run_until_done again with more ticks")
+
+
+def _percentile(sorted_xs: List[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sample."""
+    if not sorted_xs:
+        return 0.0
+    idx = max(0, int(np.ceil(q / 100.0 * len(sorted_xs))) - 1)
+    return float(sorted_xs[idx])
 
 
 class Engine:
+    _LAT_WINDOW = 4096          # samples kept per latency series
+
     def __init__(self, backend: ModelBackend, *, n_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, policy="mode-affinity"):
         self.backend = backend
         self.n_slots, self.max_len = n_slots, max_len
+        self.policy: BatchPolicy = get_policy(policy)
         self.state = backend.init_state(n_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self._queue: List[Request] = []
+        self._queues: Dict[Optional[str], List[Request]] = {}
         self._requests: Dict[int, Request] = {}
         self._next_rid = 0
+        self.hw_mode = None     # simulated interconnect state, carried
         self.stats: Dict[str, float] = {
             "ticks": 0, "served": 0, "wall_s": 0.0, "sim_cycles": 0.0,
             "sim_latency_s": 0.0, "mode_switches": 0.0,
-            "reconfig_cycles": 0.0,
+            "reconfig_cycles": 0.0, "deadline_misses": 0,
+        }
+        # bounded sample windows: a long-lived engine must not accumulate
+        # per-request history forever (same contract as run_until_done not
+        # accumulating historical results) -- percentiles reflect the most
+        # recent _LAT_WINDOW requests
+        self._lat: Dict[str, List[float]] = {
+            "queue_wait_wall": [], "queue_wait_sim": [],
+            "service_wall": [], "service_sim": [],
         }
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None, *, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               workload: Optional[str] = None) -> int:
         req = Request(self._next_rid, np.asarray(prompt), max_new_tokens,
-                      eos_id)
+                      eos_id, priority=priority, deadline_s=deadline_s,
+                      workload=workload)
         self.backend.validate(req)     # reject bad payloads before queueing
         self._next_rid += 1
-        self._queue.append(req)
+        req.t_submit = time.perf_counter()
+        req.sim_submit = self.stats["sim_latency_s"]
+        self._queues.setdefault(workload, []).append(req)
         self._requests[req.rid] = req
         return req.rid
 
+    def _queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _bucket_for(self, workload: Optional[str], k: int) -> int:
+        b = self.backend
+        if hasattr(b, "bucket_for"):
+            return b.bucket_for(workload, k)
+        if hasattr(b, "bucket"):
+            return b.bucket(k)
+        return k
+
+    def _plans(self):
+        plans = getattr(self.backend, "plans", None)
+        if plans is not None:
+            return plans
+        plan = getattr(self.backend, "plan", None)
+        return {None: plan} if plan is not None else {}
+
     def _admit(self):
-        for slot in range(self.n_slots):
-            if self.slot_req[slot] is None and self._queue:
-                req = self._queue.pop(0)
-                self.state = self.backend.prefill(self.state, slot, req)
-                self.slot_req[slot] = req
+        free = [s for s, r in enumerate(self.slot_req) if r is None]
+        if not free or not self._queued():
+            return
+        ctx = SchedContext(
+            queues=self._queues, free_slots=len(free),
+            active=frozenset(r.workload for r in self.slot_req
+                             if r is not None),
+            hw_mode=self.hw_mode, plans=self._plans(),
+            bucket_for=self._bucket_for)
+        picked = self.policy.select(ctx)
+        for req, slot in zip(picked, free):
+            self._queues[req.workload].remove(req)
+            self.state = self.backend.prefill(self.state, slot, req)
+            self.slot_req[slot] = req
+            req.t_admit = time.perf_counter()
+            req.sim_admit = self.stats["sim_latency_s"]
+            self._sample("queue_wait_wall", req.t_admit - req.t_submit)
+            self._sample("queue_wait_sim", req.sim_admit - req.sim_submit)
 
     def tick(self):
         """One engine iteration: admit requests, run one batched step for
-        all active slots, recycle finished slots."""
+        all active slots, recycle finished slots, re-admit into the freed
+        slots.  Times itself, so ``throughput()`` reports wall figures
+        whether the engine is driven here or through ``run_until_done``."""
+        t0 = time.perf_counter()
         self._admit()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
         self.state = self.backend.step(self.state, self.slot_req)
         self.stats["ticks"] += 1
-        rep = self.backend.batch_report(len(active))
+        rep = self.backend.batch_report(len(active), prev_mode=self.hw_mode)
         if rep is not None:
+            rep = dict(rep)
+            exit_mode = rep.pop("exit_mode", None)
+            if exit_mode is not None:
+                self.hw_mode = exit_mode
             for k, v in rep.items():
                 self.stats[k] = self.stats.get(k, 0.0) + v
+        now = time.perf_counter()
         for s in active:
-            if self.slot_req[s].done:
+            req = self.slot_req[s]
+            if req.done:
                 self.stats["served"] += 1
+                req.t_done, req.sim_done = now, self.stats["sim_latency_s"]
+                self._sample("service_wall", now - req.t_admit)
+                self._sample("service_sim", req.sim_done - req.sim_admit)
+                if req.deadline_s is not None:
+                    req.met_deadline = (now - req.t_submit
+                                        <= req.deadline_s)
+                    if not req.met_deadline:
+                        self.stats["deadline_misses"] += 1
                 self.slot_req[s] = None
+        # re-admit into freed slots NOW: admission only at tick start left
+        # recycled slots idle for a whole tick under a saturated queue
+        self._admit()
+        self.stats["wall_s"] += time.perf_counter() - t0
 
     def run_until_done(self, max_ticks: int = 1000) -> Dict[int, list]:
         """Drive ticks until queue and slots drain; returns {rid: result}
         (token lists for autoregressive backends, output arrays for
         one-shot backends) for every request not returned by an earlier
         call -- each request is handed back exactly once, so a long-lived
-        engine does not accumulate historical results."""
+        engine does not accumulate historical results.
+
+        If ``max_ticks`` elapses with work still queued or in flight,
+        raises ``IncompleteRunError`` instead of silently dropping the
+        unfinished requests: completed results ride on the exception and
+        every request stays owned by the engine for a retry.
+        """
         snapshot = dict(self._requests)
-        t0 = time.perf_counter()
         for _ in range(max_ticks):
             self.tick()
             busy = any(r is not None for r in self.slot_req)
-            if not busy and not self._queue:
+            if not busy and not self._queued():
                 break
-        self.stats["wall_s"] += time.perf_counter() - t0
+        pending = [rid for rid, r in snapshot.items() if not r.done]
+        if pending:
+            raise IncompleteRunError(
+                pending,
+                {rid: r.result() for rid, r in snapshot.items() if r.done})
+        self.stats.update(self.latency_stats())
         for rid in snapshot:
             del self._requests[rid]
         return {rid: r.result() for rid, r in snapshot.items()}
+
+    def _sample(self, series: str, value: float) -> None:
+        xs = self._lat[series]
+        xs.append(value)
+        if len(xs) > self._LAT_WINDOW:
+            del xs[: len(xs) - self._LAT_WINDOW]
+
+    def latency_stats(self) -> Dict[str, float]:
+        """p50/p95 queue-wait and service latency, wall + simulated clocks
+        (seconds), over the most recent ``_LAT_WINDOW`` requests."""
+        out: Dict[str, float] = {}
+        for name, xs in self._lat.items():
+            if not xs:
+                continue
+            s = sorted(xs)
+            out[f"p50_{name}_s"] = _percentile(s, 50)
+            out[f"p95_{name}_s"] = _percentile(s, 95)
+        return out
+
+    def per_workload_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-workload accounting when the backend keeps it (multi-
+        workload serving); empty for single-workload backends."""
+        return {n: dict(v) for n, v in
+                getattr(self.backend, "workload_stats", {}).items()}
 
     def throughput(self) -> Dict[str, float]:
         """Requests/s in both clocks (wall + simulated VIKIN latency)."""

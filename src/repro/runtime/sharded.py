@@ -21,6 +21,13 @@ multi-chip ``core/engine.VikinArray`` model: per-chip cycles for the row
 shard each chip computes, plus the host scatter/gather transfer -- so
 ``ModePlan`` charges and per-request cycle attribution stay meaningful at
 scale.
+
+The mode-aware scheduler layer (runtime/scheduler.py) composes with this
+backend unchanged: ``ShardedVikinBackend`` inherits the carry-over-aware
+``batch_report(prev_mode=...)`` and the ``bucket``/``plan`` surface the
+batch policies read, so ``--arch a,b,c --devices N`` wraps one sharded
+backend per workload inside a MultiWorkloadBackend and mode-affinity
+batching applies per tick exactly as on one device.
 """
 from __future__ import annotations
 
@@ -32,7 +39,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import jax_compat
 from repro.core.engine import VikinArray, VikinHW
 from repro.launch.mesh import serving_mesh
-from repro.runtime.backends import VikinBackend, _next_pow2
+from repro.runtime.backends import VikinBackend
+from repro.utils import next_pow2 as _next_pow2
 
 
 class ShardedVikinBackend(VikinBackend):

@@ -1,0 +1,13 @@
+"""Small shared utilities used across the kernel and serving stacks."""
+from __future__ import annotations
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= ``n``, with a floor of 1.
+
+    ``next_pow2(0) == next_pow2(1) == 1``: the degenerate sizes that used
+    to be handled (identically) by two private copies in
+    kernels/autotune.py and runtime/backends.py -- this is the single
+    tested definition both now share (tests/test_scheduler.py).
+    """
+    return 1 << max(0, int(n) - 1).bit_length()

@@ -58,6 +58,27 @@ def test_corrupt_cache_file_ignored(tmp_cache):
     assert autotune.AutotuneCache(tmp_cache).lookup("anything") is None
 
 
+def test_interleaved_saves_merge_instead_of_losing_entries(tmp_cache):
+    """Two cache objects on the same file (concurrent CI jobs / sharded
+    runs): each save re-reads and merges the on-disk entries, so neither
+    process's keys are lost to the other's whole-file rewrite."""
+    c1 = autotune.AutotuneCache(tmp_cache)
+    c2 = autotune.AutotuneCache(tmp_cache)
+    assert c2.lookup("kern|64|float32|cpu") is None   # c2 loads (empty) now
+    c1.store("kern|64|float32|cpu", {"bm": 64}, us=1.0)      # c1 writes
+    # c2's in-memory view predates c1's write; its save used to clobber c1
+    c2.store("kern|128|float32|cpu", {"bm": 128}, us=2.0)
+    c1.store("kern|256|float32|cpu", {"bm": 256}, us=3.0)    # and back
+    fresh = autotune.AutotuneCache(tmp_cache)
+    assert fresh.lookup("kern|64|float32|cpu") == {"bm": 64}
+    assert fresh.lookup("kern|128|float32|cpu") == {"bm": 128}
+    assert fresh.lookup("kern|256|float32|cpu") == {"bm": 256}
+    # same-key conflict: the saving process's fresher timing wins
+    c2.store("kern|64|float32|cpu", {"bm": 32}, us=0.5)
+    assert autotune.AutotuneCache(tmp_cache).lookup(
+        "kern|64|float32|cpu") == {"bm": 32}
+
+
 def test_search_times_candidates_and_persists(tmp_cache):
     calls = []
 

@@ -78,11 +78,56 @@ def test_reconfig_charge_scales_with_batch():
 
 
 def test_serving_report_attribution():
+    """Batch rows stream back-to-back, so a first!=last plan pays one
+    boundary flip per row boundary on top of each row's internal switch
+    (the carry-over contract, DESIGN.md Sec. 14)."""
     layers = mlp_layers([72, 304]) + kan_layers([304, 96], S43)
     rep1 = serving_report(layers, batch=1)
     rep3 = serving_report(layers, batch=3)
-    assert rep3["sim_cycles"] == pytest.approx(3 * rep1["sim_cycles"])
-    assert rep3["mode_switches"] == 3
-    assert rep3["reconfig_cycles"] == 3 * RECONFIG_CYCLES
-    # per-request attribution is batch-size independent (sequential stream)
-    assert rep3["sim_cycles"] / 3 == pytest.approx(rep1["sim_cycles"])
+    # mlp->kan: 1 internal switch per row, exits PIPELINE, re-enters
+    # PARALLEL -> 2 boundary flips between the 3 rows
+    assert rep1["mode_switches"] == 1
+    assert rep3["mode_switches"] == 3 + 2
+    assert rep3["reconfig_cycles"] == 5 * RECONFIG_CYCLES
+    assert rep3["sim_cycles"] == pytest.approx(
+        3 * rep1["sim_cycles"] + 2 * RECONFIG_CYCLES)
+    assert rep1["exit_mode"] is ExecMode.PIPELINE
+
+
+def test_serving_report_homogeneous_plan_has_no_boundary_flips():
+    """Per-request attribution stays batch-size independent whenever the
+    plan starts and ends in the same mode (every gated bench arch)."""
+    layers = mlp_layers([72, 304]) + kan_layers([304, 32], S43) \
+        + mlp_layers([32, 96])
+    rep1 = serving_report(layers, batch=1)
+    rep4 = serving_report(layers, batch=4)
+    assert rep4["mode_switches"] == 4 * rep1["mode_switches"]
+    assert rep4["sim_cycles"] == pytest.approx(4 * rep1["sim_cycles"])
+
+
+def test_serving_report_entry_flip_against_carried_mode():
+    layers = kan_layers([72, 96], S43)          # all-PIPELINE, 0 internal
+    cold = serving_report(layers, batch=2)
+    same = serving_report(layers, batch=2, prev_mode=ExecMode.PIPELINE)
+    flip = serving_report(layers, batch=2, prev_mode=ExecMode.PARALLEL)
+    assert cold["mode_switches"] == same["mode_switches"] == 0
+    assert flip["mode_switches"] == 1
+    assert flip["sim_cycles"] == pytest.approx(
+        same["sim_cycles"] + RECONFIG_CYCLES)
+    for rep in (cold, same, flip):
+        assert rep["exit_mode"] is ExecMode.PIPELINE
+
+
+@pytest.mark.parametrize("kinds,batch,prev,expect_sw,expect_exit", [
+    ([K], 3, None, 0, ExecMode.PIPELINE),            # cold, homogeneous
+    ([K], 3, ExecMode.PIPELINE, 0, ExecMode.PIPELINE),   # carried, free
+    ([K], 3, ExecMode.PARALLEL, 1, ExecMode.PIPELINE),   # entry flip only
+    ([M, K], 3, None, 3 + 2, ExecMode.PIPELINE),     # internal + boundary
+    ([M, K], 3, ExecMode.PIPELINE, 6, ExecMode.PIPELINE),  # + entry flip
+    ([M, K, M], 2, ExecMode.PARALLEL, 4, ExecMode.PARALLEL),
+    ([K], 0, ExecMode.PARALLEL, 0, ExecMode.PARALLEL),   # empty batch
+])
+def test_stream_switches(kinds, batch, prev, expect_sw, expect_exit):
+    sw, exit_mode = ModePlan.for_layers(kinds).stream_switches(batch, prev)
+    assert sw == expect_sw
+    assert exit_mode is expect_exit

@@ -199,9 +199,12 @@ def test_vikin_stats_report_simulated_cycles_and_modes():
     eng.run_until_done()
     s = eng.stats
     assert s["sim_cycles"] > 0 and s["sim_latency_s"] > 0
-    # vikin-small is mlp->kan: one mode switch per served instance
-    assert s["mode_switches"] == 4
-    assert s["reconfig_cycles"] == 4 * 8
+    # vikin-small is mlp->kan: one internal switch per served instance,
+    # plus -- under the carry-over contract (DESIGN.md Sec. 14) -- one
+    # boundary flip per instance boundary because the plan exits PIPELINE
+    # and re-enters PARALLEL.  4 rows, one batch, cold start: 4 + 3.
+    assert s["mode_switches"] == 4 + 3
+    assert s["reconfig_cycles"] == 7 * 8
     tp = eng.throughput()
     assert tp["requests"] == 4 and tp["sim_rps"] > 0
 
@@ -249,3 +252,61 @@ def test_vikin_bucket_quantization():
     # non-pow2 slot counts still serve pow2 buckets (determinism regime)
     _, _, eng3 = _vikin_engine(n_slots=3)
     assert [eng3.backend.bucket(n) for n in (1, 2, 3)] == [2, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Engine bug sweep regressions (ISSUE 5 satellites).
+# ---------------------------------------------------------------------------
+
+from repro.runtime.server import IncompleteRunError
+
+
+def test_run_until_done_raises_instead_of_dropping_on_max_ticks():
+    """Hitting max_ticks used to silently delete unfinished requests from
+    the engine and return the partial result set as if complete."""
+    model, params, eng = _vikin_engine(n_slots=1)
+    rids = [eng.submit(p) for p in _feature_burst(model, 4)]
+    with pytest.raises(IncompleteRunError) as exc:
+        eng.run_until_done(max_ticks=2)
+    # the two served ticks completed two requests; the rest are pending,
+    # not dropped
+    assert len(exc.value.completed) == 2
+    assert len(exc.value.pending) == 2
+    assert set(exc.value.completed) | set(exc.value.pending) == set(rids)
+    # nothing was lost: a follow-up call hands back the FULL result set
+    out = eng.run_until_done()
+    assert sorted(out) == sorted(rids)
+    assert all(out[r].shape == (model.sizes[-1],) for r in rids)
+
+
+def test_freed_slots_readmit_within_the_same_tick():
+    """Slots recycled at the end of tick() must be re-staged immediately:
+    under a saturated queue every lane leaves the tick busy, and ticks to
+    drain stays at the ceil(n/slots) floor."""
+    model, params, eng = _vikin_engine(n_slots=2)
+    for p in _feature_burst(model, 6):
+        eng.submit(p)
+    eng.tick()
+    assert eng.stats["served"] == 2
+    # the freed lanes already hold the next batch (was: both None until
+    # the next tick's admission)
+    assert all(r is not None for r in eng.slot_req)
+    ticks = 1
+    while eng.stats["served"] < 6:
+        eng.tick()
+        ticks += 1
+    assert ticks == 3                       # 6 requests / 2 slots
+    assert all(r is None for r in eng.slot_req)
+
+
+def test_throughput_reports_wall_rps_when_tick_driven_directly():
+    """tick() times itself, so wall throughput no longer depends on going
+    through run_until_done."""
+    model, params, eng = _vikin_engine(n_slots=2)
+    for p in _feature_burst(model, 4):
+        eng.submit(p)
+    while eng.stats["served"] < 4:
+        eng.tick()
+    assert eng.stats["wall_s"] > 0
+    tp = eng.throughput()
+    assert tp["requests"] == 4 and tp["wall_rps"] > 0

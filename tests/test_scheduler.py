@@ -1,0 +1,303 @@
+"""Mode-aware multi-workload scheduler (runtime/scheduler.py, DESIGN Sec. 14).
+
+Pins the four claims the scheduler layer makes:
+
+  * DETERMINISM: batched multi-workload serving under mode-affinity (and
+    fifo) is bitwise identical to single-request serving per workload.
+  * RECONFIGURATION: on an interleaved KAN/MLP stream, mode-affinity
+    strictly lowers reconfig_cycles vs the fifo baseline (exact flip
+    counts pinned) without raising per-request sim cycles.
+  * ORDERING: priority is honored within a workload, deadline misses are
+    counted, and a passed-over workload is force-served within the
+    starvation bound.
+  * ACCOUNTING: queue-wait/service percentiles exist in both clocks and
+    per-workload stats add up to the engine totals.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.core.modes import RECONFIG_CYCLES
+from repro.models.ffn import vikin_stack_init
+from repro.runtime.backends import MultiWorkloadBackend, VikinBackend
+from repro.runtime.scheduler import (
+    FifoPolicy,
+    ModeAffinityPolicy,
+    get_policy,
+)
+from repro.runtime.server import Engine
+from repro.utils import next_pow2
+
+ARCHS = ("vikin-kan2", "vikin-mlp3")     # pure PIPELINE vs pure PARALLEL
+
+
+def _models_params(archs=ARCHS, seed=0):
+    models = {a: VIKIN_ARCHS[a] for a in archs}
+    params = {a: vikin_stack_init(jax.random.key(seed), m)
+              for a, m in models.items()}
+    return models, params
+
+
+def _interleaved_stream(models, archs, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(archs[i % len(archs)],
+             rng.random(models[archs[i % len(archs)]].sizes[0],
+                        dtype=np.float32)) for i in range(n)]
+
+
+def _multi_engine(models, params, policy, *, n_slots=4, impl="jnp"):
+    backend = MultiWorkloadBackend(
+        {a: VikinBackend(models[a], params[a], impl=impl) for a in models})
+    return Engine(backend, n_slots=n_slots, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: scheduled batches == single-request serving, bitwise.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+@pytest.mark.parametrize("policy", ["mode-affinity", "fifo"])
+def test_multi_workload_batched_equals_single_bitwise(impl, policy):
+    models, params = _models_params()
+    stream = _interleaved_stream(models, ARCHS, 6)
+    eng = _multi_engine(models, params, policy, n_slots=4, impl=impl)
+    rids = [eng.submit(x, workload=a) for a, x in stream]
+    batched = eng.run_until_done()
+
+    for (a, x), rid in zip(stream, rids):
+        solo = Engine(VikinBackend(models[a], params[a], impl=impl),
+                      n_slots=4)
+        srid = solo.submit(x)
+        ref = solo.run_until_done()[srid]
+        assert np.array_equal(batched[rid], ref), (
+            f"{policy}: batched != single for {a} request {rid}")
+
+
+# ---------------------------------------------------------------------------
+# Reconfiguration: the row the scheduler exists for.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_fifo_vs_affinity_reconfig_pinned(impl):
+    """8 interleaved requests, 4 slots.  FIFO serves the arrival order's
+    longest same-workload prefix -- an alternating stream starts with a
+    singleton batch and flips mode on nearly every tick.  Mode-affinity
+    drains one mode before flipping once."""
+    models, params = _models_params()
+    stream = _interleaved_stream(models, ARCHS, 8)
+
+    def serve(policy):
+        eng = _multi_engine(models, params, policy, n_slots=4, impl=impl)
+        for a, x in stream:
+            eng.submit(x, workload=a)
+        eng.run_until_done()
+        return eng.stats
+
+    fifo, aff = serve("fifo"), serve("mode-affinity")
+    assert fifo["served"] == aff["served"] == 8
+    # both archs have zero INTERNAL switches, so every flip is a batch
+    # boundary crossing.  mode-affinity: kan x4 then mlp x4 -> exactly 1.
+    assert aff["mode_switches"] == 1
+    assert aff["reconfig_cycles"] == RECONFIG_CYCLES
+    assert fifo["mode_switches"] > aff["mode_switches"]
+    assert fifo["reconfig_cycles"] > aff["reconfig_cycles"]
+    # compute per row is policy-independent; affinity only removes flips
+    assert (aff["sim_cycles"] / aff["served"]
+            < fifo["sim_cycles"] / fifo["served"])
+
+
+def test_consecutive_same_mode_batches_charge_zero_reconfig():
+    """The carry-over contract at engine level: a homogeneous workload
+    served across many ticks never pays a single reconfiguration."""
+    models, params = _models_params()
+    for arch in ARCHS:
+        eng = Engine(VikinBackend(models[arch], params[arch], impl="jnp"),
+                     n_slots=2)
+        rng = np.random.default_rng(0)
+        for _ in range(6):
+            eng.submit(rng.random(models[arch].sizes[0], dtype=np.float32))
+        eng.run_until_done()
+        assert eng.stats["ticks"] == 3
+        assert eng.stats["mode_switches"] == 0
+        assert eng.stats["reconfig_cycles"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Priority / deadline / starvation.
+# ---------------------------------------------------------------------------
+
+
+def test_priority_orders_admission_within_a_workload():
+    models, params = _models_params(("vikin-kan2",))
+    eng = Engine(VikinBackend(models["vikin-kan2"],
+                              params["vikin-kan2"], impl="jnp"),
+                 n_slots=1)
+    rng = np.random.default_rng(0)
+    prios = [0, 0, 5, 1]
+    rids = [eng.submit(rng.random(72, dtype=np.float32), priority=p)
+            for p in prios]
+    reqs = {rid: eng._requests[rid] for rid in rids}     # keep the objects
+    eng.run_until_done()
+    admitted = sorted(rids, key=lambda rid: reqs[rid].t_admit)
+    # highest priority first, then arrival order among equals
+    assert admitted == [rids[2], rids[3], rids[0], rids[1]]
+
+
+def test_deadline_accounting_counts_misses():
+    models, params = _models_params(("vikin-kan2",))
+    eng = Engine(VikinBackend(models["vikin-kan2"],
+                              params["vikin-kan2"], impl="jnp"),
+                 n_slots=2)
+    rng = np.random.default_rng(0)
+    missed = eng.submit(rng.random(72, dtype=np.float32), deadline_s=0.0)
+    met = eng.submit(rng.random(72, dtype=np.float32), deadline_s=600.0)
+    free = eng.submit(rng.random(72, dtype=np.float32))
+    reqs = {rid: eng._requests[rid] for rid in (missed, met, free)}
+    eng.run_until_done()
+    assert eng.stats["deadline_misses"] == 1
+    assert reqs[missed].met_deadline is False
+    assert reqs[met].met_deadline is True
+    assert reqs[free].met_deadline is None       # no deadline, no verdict
+
+
+def test_overdue_deadline_preempts_mode_affinity():
+    """A workload holding an already-late request wins the batch even
+    against the interconnect's current mode."""
+    models, params = _models_params()
+    eng = _multi_engine(models, params, "mode-affinity", n_slots=2)
+    rng = np.random.default_rng(0)
+    kan = [eng.submit(rng.random(72, dtype=np.float32),
+                      workload="vikin-kan2") for _ in range(4)]
+    late = eng.submit(rng.random(72, dtype=np.float32),
+                      workload="vikin-mlp3", deadline_s=0.0)
+    reqs = {rid: eng._requests[rid] for rid in kan + [late]}
+    eng.run_until_done()
+    # the overdue mlp request was admitted before the kan queue drained
+    assert reqs[late].t_admit < max(reqs[r].t_admit for r in kan)
+
+
+def test_starvation_bound_serves_passed_over_workload():
+    """A minority workload in the non-affine mode is force-served after
+    max_starve_ticks admission rounds, even while the majority queue is
+    still full."""
+    models, params = _models_params()
+    backend = MultiWorkloadBackend(
+        {a: VikinBackend(models[a], params[a], impl="jnp") for a in ARCHS})
+    eng = Engine(backend, n_slots=2,
+                 policy=ModeAffinityPolicy(max_starve_ticks=2))
+    rng = np.random.default_rng(0)
+    kan = [eng.submit(rng.random(72, dtype=np.float32),
+                      workload="vikin-kan2") for _ in range(12)]
+    mlp = [eng.submit(rng.random(72, dtype=np.float32),
+                      workload="vikin-mlp3") for _ in range(2)]
+    reqs = {rid: eng._requests[rid] for rid in kan + mlp}
+    eng.run_until_done()
+    ws = eng.per_workload_stats()
+    assert ws["vikin-mlp3"]["served"] == 2
+    # the mlp batch ran before the kan queue drained: its simulated
+    # completion predates the last kan completion
+    assert (max(reqs[r].sim_done for r in mlp)
+            < max(reqs[r].sim_done for r in kan))
+
+
+# ---------------------------------------------------------------------------
+# Bucket-waste trim + percentiles + validation + next_pow2.
+# ---------------------------------------------------------------------------
+
+
+def test_affinity_trims_batch_to_zero_waste_bucket_when_latency_neutral():
+    """q=8 requests, 6 slots: serving 6 pads to an 8-bucket (waste 2) and
+    still needs 2 ticks; serving 4+4 is zero-waste in the same 2 ticks."""
+    models, params = _models_params(("vikin-kan2",))
+    eng = Engine(VikinBackend(models["vikin-kan2"],
+                              params["vikin-kan2"], impl="jnp"),
+                 n_slots=6)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        eng.submit(rng.random(72, dtype=np.float32))
+    eng.tick()
+    assert eng.stats["served"] == 4
+    eng.run_until_done()
+    assert eng.stats["served"] == 8
+    assert eng.stats["ticks"] == 2
+
+
+def test_tail_batches_are_not_delayed_for_padding():
+    """3 pending, 8 free: waste-trimming to 2 would add a drain tick;
+    the policy must serve all 3 now."""
+    models, params = _models_params(("vikin-kan2",))
+    eng = Engine(VikinBackend(models["vikin-kan2"],
+                              params["vikin-kan2"], impl="jnp"),
+                 n_slots=8)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.random(72, dtype=np.float32))
+    eng.tick()
+    assert eng.stats["served"] == 3
+    assert eng.stats["ticks"] == 1
+
+
+def test_latency_percentiles_in_both_clocks():
+    models, params = _models_params()
+    eng = _multi_engine(models, params, "mode-affinity", n_slots=2)
+    stream = _interleaved_stream(models, ARCHS, 6)
+    for a, x in stream:
+        eng.submit(x, workload=a)
+    eng.run_until_done()
+    s = eng.stats
+    for k in ("p50_queue_wait_wall_s", "p95_queue_wait_wall_s",
+              "p50_queue_wait_sim_s", "p95_queue_wait_sim_s",
+              "p50_service_wall_s", "p95_service_wall_s",
+              "p50_service_sim_s", "p95_service_sim_s"):
+        assert k in s, k
+    # later batches waited in the simulated clock; early ones did not
+    assert s["p95_queue_wait_sim_s"] > 0
+    assert s["p50_service_sim_s"] > 0
+    assert s["p95_queue_wait_wall_s"] >= s["p50_queue_wait_wall_s"]
+
+
+def test_per_workload_stats_sum_to_engine_totals():
+    models, params = _models_params()
+    eng = _multi_engine(models, params, "mode-affinity", n_slots=4)
+    stream = _interleaved_stream(models, ARCHS, 10)
+    for a, x in stream:
+        eng.submit(x, workload=a)
+    eng.run_until_done()
+    ws = eng.per_workload_stats()
+    assert sum(w["served"] for w in ws.values()) == eng.stats["served"]
+    assert sum(w["sim_cycles"] for w in ws.values()) == pytest.approx(
+        eng.stats["sim_cycles"])
+    assert sum(w["reconfig_cycles"] for w in ws.values()) == pytest.approx(
+        eng.stats["reconfig_cycles"])
+
+
+def test_unknown_workload_rejected_at_submit():
+    models, params = _models_params()
+    eng = _multi_engine(models, params, "mode-affinity")
+    with pytest.raises(ValueError, match="unknown workload"):
+        eng.submit(np.zeros(72, np.float32), workload="vikin-nope")
+    with pytest.raises(ValueError, match="unknown workload"):
+        eng.submit(np.zeros(72, np.float32))        # workload=None
+
+
+def test_get_policy_resolution():
+    assert isinstance(get_policy("fifo"), FifoPolicy)
+    assert isinstance(get_policy("mode-affinity"), ModeAffinityPolicy)
+    inst = ModeAffinityPolicy(max_starve_ticks=3)
+    assert get_policy(inst) is inst
+    with pytest.raises(ValueError, match="unknown batch policy"):
+        get_policy("lifo")
+
+
+def test_next_pow2_edges():
+    """The single shared definition (repro.utils) both runtime/backends
+    and kernels/autotune now use, with the degenerate sizes pinned."""
+    assert next_pow2(0) == 1
+    assert next_pow2(1) == 1
+    assert [next_pow2(n) for n in (2, 3, 4, 5, 8, 9, 1024, 1025)] == \
+        [2, 4, 4, 8, 8, 16, 1024, 2048]
+    from repro.kernels import autotune
+    assert autotune.shape_bucket((0, 1, 3)) == (1, 1, 4)
