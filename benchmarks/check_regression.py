@@ -140,11 +140,15 @@ def check_serving(base: Dict, fresh: Dict, f: Findings,
             continue
         r = fresh[name]
         if name.startswith("sched:"):
-            # multi-workload scheduler row: per-policy deterministic sim
+            # multi-workload scheduler row: count-independent deterministic
             # fields, plus the ordering claims the row exists to pin --
             # mode-affinity must strictly beat fifo on reconfiguration and
             # never pay for it in per-request cycles, with outputs bitwise
             # identical to single-request serving under BOTH policies.
+            # (CI re-emits the row at a smaller request count, so the
+            # per-request reconfig amortization itself cannot gate; the
+            # flip STRUCTURE can: fifo flips once per request boundary,
+            # affinity a fixed number of times per run.)
             if r.get("bitwise_identical") is not True:
                 f.fail(f"{name}.bitwise_identical",
                        "scheduled batched outputs no longer bitwise-"
@@ -152,10 +156,23 @@ def check_serving(base: Dict, fresh: Dict, f: Findings,
             for pol in ("fifo", "mode-affinity"):
                 bp = b["policies"][pol]
                 rp = r.get("policies", {}).get(pol, {})
-                for k in ("sim_cycles_per_req", "reconfig_cycles_per_req"):
-                    _cmp(f, f"{name}.{pol}.{k}", bp[k], rp.get(k), rtol)
+                _cmp(f, f"{name}.{pol}.sim_cycles_per_req",
+                     bp["sim_cycles_per_req"],
+                     rp.get("sim_cycles_per_req"), rtol)
             rf = r.get("policies", {}).get("fifo", {})
             ra = r.get("policies", {}).get("mode-affinity", {})
+            b_ratio = (b["policies"]["fifo"]["mode_switches"]
+                       / max(b["requests"] - 1, 1))
+            r_ratio = (rf.get("mode_switches", 0)
+                       / max(r.get("requests", 1) - 1, 1))
+            _cmp(f, f"{name}.fifo.mode_switches_per_boundary",
+                 b_ratio, r_ratio, rtol)
+            if (ra.get("mode_switches")
+                    != b["policies"]["mode-affinity"]["mode_switches"]):
+                f.fail(f"{name}.mode-affinity.mode_switches",
+                       f"{b['policies']['mode-affinity']['mode_switches']}"
+                       f" -> {ra.get('mode_switches')} (count-independent "
+                       f"total flips per run)")
             if not (ra.get("reconfig_cycles", float("inf"))
                     < rf.get("reconfig_cycles", 0)):
                 f.fail(f"{name}.reconfig_cycles",

@@ -223,6 +223,9 @@ def main():
     from repro.configs.registry import get_serving_config
 
     names = [a.strip() for a in args.arch.split(",") if a.strip()]
+    if not names:
+        raise SystemExit("--arch got no arch ids; pass one id or a comma "
+                         "list like vikin-kan2,vikin-mlp3")
     try:
         resolved = [get_serving_config(n) for n in names]
     except KeyError as e:

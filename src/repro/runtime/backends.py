@@ -355,7 +355,8 @@ class MultiWorkloadBackend(ModelBackend):
             if hasattr(b, "plan")}
         self.workload_stats: Dict[str, Dict[str, float]] = {
             n: {} for n in self.backends}
-        self._last_served: List[Tuple[str, int]] = []
+        # (workload, n_active, n_done) per sub-backend stepped this tick
+        self._last_served: List[Tuple[str, int, int]] = []
 
     def bucket_for(self, workload: str, n_active: int) -> int:
         """Padding bucket the named workload would run ``n_active``
