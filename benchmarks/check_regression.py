@@ -10,11 +10,14 @@ non-zero beyond tolerance.
 Only DETERMINISTIC fields gate -- simulated cycles (per-request, which is
 batch-size independent by construction, DESIGN.md Sec. 11), oracle errors,
 dispatch/op/byte counts, mode plans, the sharded bitwise-identity flag,
-and the scheduler row's per-policy figures plus its fifo-vs-mode-affinity
+the scheduler row's per-policy figures plus its fifo-vs-mode-affinity
 ordering (mode-affinity must stay strictly cheaper in reconfig cycles and
-no worse per-request, DESIGN.md Sec. 14).
-Wall-clock fields (``wall_*``, ``*_rps``) and training-dependent accuracy
-(``val_mse``) never gate: they vary run to run / with CI step counts.
+no worse per-request, DESIGN.md Sec. 14), and the open-loop rows'
+saturation knee, latency curve, and shed-vs-unbounded goodput ordering
+(everything there is on the simulated trace clock, DESIGN.md Sec. 15).
+Wall-clock fields (``wall_*``, wall ``*_rps``) and training-dependent
+accuracy (``val_mse``) never gate: they vary run to run / with CI step
+counts.
 
 The benches overwrite the artifact in place, so the baseline is read from
 git (``git show HEAD:<name>``) by default; a PR that intentionally moves a
@@ -130,6 +133,13 @@ def check_serving(base: Dict, fresh: Dict, f: Findings,
         f.fail("sharded:*", "no sharded rows in the committed baseline; "
                "regenerate it under "
                "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    # Same closure for the open-loop rows: the overload story (saturation
+    # knee + shed-vs-unbounded goodput ordering) must stay in the gated
+    # baseline, or a regenerated artifact could silently drop it.
+    if not any(n.startswith("openloop:") for n in base):
+        f.fail("openloop:*", "no openloop rows in the committed baseline; "
+               "run 'python -m benchmarks.loadgen_bench' and commit the "
+               "artifact")
     for name, b in base.items():
         if name not in fresh:
             hint = (" -- re-run serving_bench under XLA_FLAGS="
@@ -184,6 +194,71 @@ def check_serving(base: Dict, fresh: Dict, f: Findings,
                 f.fail(f"{name}.sim_cycles_per_req",
                        f"mode-affinity ({ra.get('sim_cycles_per_req')}) "
                        f"exceeds fifo ({rf.get('sim_cycles_per_req')})")
+            continue
+        if name.startswith("openloop:sweep:"):
+            # Open-loop latency-vs-load sweep (DESIGN.md Sec. 15).  The
+            # whole row lives in the simulated domain (trace clock + cycle
+            # model), so it is machine-independent: the knee and the
+            # per-point curve gate at tight tolerance, and the trace
+            # sha256 pins that the same arrivals were replayed.  The
+            # *_rps fields here are sim-clock figures, not wall clock --
+            # they gate, unlike every wall *_rps elsewhere.
+            if r.get("knee_offered_mult") != b["knee_offered_mult"]:
+                f.fail(f"{name}.knee_offered_mult",
+                       f"saturation knee moved: {b['knee_offered_mult']} "
+                       f"-> {r.get('knee_offered_mult')}")
+            bp, rp = b["points"], r.get("points", [])
+            if len(rp) != len(bp):
+                f.fail(f"{name}.points",
+                       f"{len(bp)} load points -> {len(rp)}")
+                continue
+            for i, (pb, pr) in enumerate(zip(bp, rp)):
+                pfx = f"{name}.points[{i}]"
+                if pr.get("offered_mult") != pb["offered_mult"]:
+                    f.fail(f"{pfx}.offered_mult",
+                           f"{pb['offered_mult']} -> "
+                           f"{pr.get('offered_mult')}")
+                if pr.get("trace_sha256") != pb["trace_sha256"]:
+                    f.fail(f"{pfx}.trace_sha256",
+                           "replayed trace differs from baseline")
+                for k in ("achieved_rps", "p50_latency_s",
+                          "p95_latency_s", "p99_latency_s"):
+                    _cmp(f, f"{pfx}.{k}", pb[k], pr.get(k), rtol)
+            continue
+        if name.startswith("openloop:burst:"):
+            # Deadline'd burst trace: shedding must yield STRICTLY higher
+            # goodput than the unbounded baseline on the same arrivals,
+            # with the queue bound respected at every tick.
+            if r.get("trace_sha256") != b["trace_sha256"]:
+                f.fail(f"{name}.trace_sha256",
+                       "replayed trace differs from baseline")
+            if r.get("max_queue") != b["max_queue"]:
+                f.fail(f"{name}.max_queue",
+                       f"{b['max_queue']} -> {r.get('max_queue')}")
+            rs = r.get("shed", {})
+            if rs.get("bound_respected") is not True:
+                f.fail(f"{name}.shed.bound_respected",
+                       "queue depth exceeded max_queue during replay")
+            if not rs.get("shed", 0) > 0:
+                f.fail(f"{name}.shed.shed",
+                       "overload trace no longer triggers shedding")
+            good_u = r.get("unbounded", {}).get("goodput_rps", 0.0)
+            good_s = rs.get("goodput_rps", 0.0)
+            if not good_s > good_u:
+                f.fail(f"{name}.goodput_rps",
+                       f"shed goodput ({good_s:g}) no longer strictly "
+                       f"above unbounded ({good_u:g})")
+            for side in ("unbounded", "shed"):
+                _cmp(f, f"{name}.{side}.goodput_rps",
+                     b[side]["goodput_rps"],
+                     r.get(side, {}).get("goodput_rps"), rtol)
+                if (r.get(side, {}).get("deadline_met")
+                        != b[side]["deadline_met"]):
+                    f.fail(f"{name}.{side}.deadline_met",
+                           f"{b[side]['deadline_met']} -> "
+                           f"{r.get(side, {}).get('deadline_met')}")
+            _cmp(f, f"{name}.goodput_gain", b["goodput_gain"],
+                 r.get("goodput_gain"), rtol)
             continue
         if name.startswith("sharded:"):
             if r.get("devices") != b["devices"]:

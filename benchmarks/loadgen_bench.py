@@ -1,0 +1,254 @@
+"""Open-loop load benchmark: latency-vs-offered-load curves + overload.
+
+Every other row in BENCH_serving.json is closed-loop (submit a burst,
+drain it), which can never overload the engine.  This bench drives the
+engine OPEN-loop from seeded replayable traces (runtime/loadgen.py) on
+the deterministic simulated clock and emits two `openloop:*` rows:
+
+* ``openloop:sweep:<arch>`` -- a Poisson arrival sweep across offered
+  load multiples of the model's estimated full-occupancy capacity, with
+  p50/p95/p99 end-to-end latency and achieved throughput at each point,
+  and the measured saturation KNEE: the first load point whose achieved
+  throughput falls below 95% of offered (DESIGN.md Sec. 15).
+* ``openloop:burst:<arch>`` -- one deadline'd bursty (Markov-modulated)
+  trace replayed twice with identical seeds: through an unbounded engine
+  (head-of-line collapse: the backlog serves every deadline dead) and
+  through a bounded one (``admission="shed"`` + ``drop_expired``).  The
+  row pins that shedding yields STRICTLY higher goodput (deadline-met
+  completions/s) and that queue depth never exceeded the configured
+  bound; the traces' sha256 proves both engines saw the same arrivals.
+
+Everything gated lives in the simulated domain (trace clock + cycle
+model), so the numbers are machine-independent and
+``check_regression.py --serving`` can hold them to tight tolerance.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.loadgen_bench            # emit rows
+  PYTHONPATH=src python -m benchmarks.loadgen_bench --smoke    # CI assert
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional
+
+import jax
+import numpy as np   # noqa: F401  (kept: payloads come from loadgen)
+
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.models.ffn import vikin_stack_init
+from repro.runtime.backends import VikinBackend
+from repro.runtime.loadgen import (
+    bursty_trace,
+    estimate_capacity_rps,
+    poisson_trace,
+    replay,
+)
+from repro.runtime.server import Engine
+
+ARTIFACT = "BENCH_serving.json"
+
+#: offered load as multiples of estimated capacity; straddles 1.0 so the
+#: sweep always exhibits a knee
+LOAD_MULTS = (0.25, 0.5, 0.75, 0.9, 1.1, 1.5, 2.0)
+KNEE_FRACTION = 0.95     # knee = first point with achieved < 0.95 x offered
+
+
+def _engine(arch: str, *, n_slots: int, impl: str, seed: int = 0,
+            **overload) -> Engine:
+    model = VIKIN_ARCHS[arch]
+    params = vikin_stack_init(jax.random.key(seed), model)
+    backend = VikinBackend(model, params, impl=impl)
+    # warm every power-of-two jit bucket the replay can hit, so wall time
+    # (untracked but finite) is not dominated by recompiles
+    k = backend.min_bucket
+    while k <= n_slots:
+        backend.warmup(k)
+        k *= 2
+    return Engine(backend, n_slots=n_slots, **overload)
+
+
+def sweep_row(arch: str = "vikin-mlp3", *, n_slots: int = 8,
+              events: int = 256, impl: str = "jnp", seed: int = 0) -> Dict:
+    """Latency-vs-offered-load curve + saturation knee, unbounded engine."""
+    cap = estimate_capacity_rps(VIKIN_ARCHS[arch], n_slots=n_slots)
+    points = []
+    knee: Optional[float] = None
+    for mult in LOAD_MULTS:
+        trace = poisson_trace(mult * cap, events, seed=seed)
+        rep = replay(_engine(arch, n_slots=n_slots, impl=impl, seed=seed),
+                     trace, mode="sim")
+        saturated = rep["achieved_rps"] < KNEE_FRACTION * rep["offered_rps"]
+        if saturated and knee is None:
+            knee = mult
+        points.append({
+            "offered_mult": mult,
+            "offered_rps": rep["offered_rps"],
+            "achieved_rps": rep["achieved_rps"],
+            "p50_latency_s": rep["p50_latency_s"],
+            "p95_latency_s": rep["p95_latency_s"],
+            "p99_latency_s": rep["p99_latency_s"],
+            "queue_depth_hwm": rep["queue_depth_hwm"],
+            "completed": rep["completed"],
+            "trace_sha256": trace.sha256(),
+        })
+    return {
+        "arch": arch,
+        "n_slots": n_slots,
+        "events_per_point": events,
+        "seed": seed,
+        "capacity_rps_estimate": cap,
+        "knee_fraction": KNEE_FRACTION,
+        "knee_offered_mult": knee,
+        "points": points,
+    }
+
+
+def burst_row(arch: str = "vikin-mlp3", *, n_slots: int = 8,
+              events: int = 320, impl: str = "jnp", seed: int = 0) -> Dict:
+    """Shed-vs-unbounded goodput under one deadline'd bursty trace."""
+    model = VIKIN_ARCHS[arch]
+    cap = estimate_capacity_rps(model, n_slots=n_slots)
+    batch_s = n_slots / cap              # steady-state batch sim latency
+    # adversarial-by-construction: bursts (5x capacity, mean dwell 48
+    # batch-times) grow an unbounded backlog far past what the 4-batch
+    # deadline can absorb, so the unbounded engine serves most of the
+    # burst dead while the bounded engine sheds it at admission
+    deadline = 4.0 * batch_s
+    max_queue = 2 * n_slots
+    trace = bursty_trace(
+        0.5 * cap, 5.0 * cap, events,
+        mean_calm_s=16.0 * batch_s, mean_burst_s=48.0 * batch_s, seed=seed,
+        priority_classes=[(0, 0.7, deadline), (2, 0.3, deadline)])
+
+    def run(**overload):
+        eng = _engine(arch, n_slots=n_slots, impl=impl, seed=seed,
+                      **overload)
+        rep = replay(eng, trace, mode="sim")
+        return {k: rep[k] for k in (
+            "completed", "deadline_met", "goodput_rps", "achieved_rps",
+            "shed", "expired", "rejected", "deadline_misses",
+            "queue_depth_hwm", "bound_respected",
+            "p50_latency_s", "p95_latency_s", "p99_latency_s")}
+
+    noshed = run()
+    shed = run(max_queue=max_queue, admission="shed", drop_expired=True)
+    return {
+        "arch": arch,
+        "n_slots": n_slots,
+        "events": events,
+        "seed": seed,
+        "deadline_s": deadline,
+        "max_queue": max_queue,
+        "rate_lo_mult": 0.5,
+        "rate_hi_mult": 5.0,
+        "trace_sha256": trace.sha256(),
+        "unbounded": noshed,
+        "shed": shed,
+        "goodput_gain": (shed["goodput_rps"]
+                         / max(noshed["goodput_rps"], 1e-9)),
+        "shed_beats_unbounded": (shed["goodput_rps"]
+                                 > noshed["goodput_rps"]),
+    }
+
+
+def smoke(*, arch: str = "vikin-small", impl: str = "pallas_interpret",
+          events: int = 32, n_slots: int = 2, max_queue: int = 4,
+          seed: int = 0) -> int:
+    """CI overload smoke: a small bursty trace through interpreted kernels
+    and a tightly bounded engine must shed (the trace offers far more than
+    capacity), must respect the bound at every tick, and must not crash.
+    Prints PASS/FAIL lines and returns a process exit code -- does NOT
+    touch the artifact."""
+    cap = estimate_capacity_rps(VIKIN_ARCHS[arch], n_slots=n_slots)
+    batch_s = n_slots / cap
+    trace = bursty_trace(
+        1.0 * cap, 6.0 * cap, events,
+        mean_calm_s=8.0 * batch_s, mean_burst_s=24.0 * batch_s, seed=seed,
+        priority_classes=[(0, 0.7, 4.0 * batch_s), (2, 0.3, 4.0 * batch_s)])
+    eng = _engine(arch, n_slots=n_slots, impl=impl, seed=seed,
+                  max_queue=max_queue, admission="shed", drop_expired=True)
+    rep = replay(eng, trace, mode="sim")
+    checks = {
+        "queue bound respected at every tick": rep["bound_respected"],
+        "nonzero sheds under overload": rep["shed"] > 0,
+        "replay drained (no stall)": not rep["incomplete"],
+        "some work still completed": rep["completed"] > 0,
+    }
+    print(f"[overload-smoke] {arch} impl={impl} events={events} "
+          f"max_queue={max_queue}: completed={rep['completed']} "
+          f"shed={rep['shed']} expired={rep['expired']} "
+          f"hwm={rep['queue_depth_hwm']} goodput={rep['goodput_rps']:.0f}")
+    ok = True
+    for name, passed in checks.items():
+        print(f"  {'PASS' if passed else 'FAIL'}: {name}")
+        ok &= bool(passed)
+    return 0 if ok else 1
+
+
+def run(arch: str = "vikin-mlp3", *, n_slots: int = 8, impl: str = "jnp",
+        sweep_events: int = 256, burst_events: int = 320,
+        seed: int = 0, artifact: str = ARTIFACT) -> Dict[str, Dict]:
+    """Emit both openloop rows, merged into the existing artifact (read-
+    modify-write: serving_bench owns the other rows)."""
+    rows = {
+        f"openloop:sweep:{arch}": sweep_row(
+            arch, n_slots=n_slots, events=sweep_events, impl=impl,
+            seed=seed),
+        f"openloop:burst:{arch}": burst_row(
+            arch, n_slots=n_slots, events=burst_events, impl=impl,
+            seed=seed),
+    }
+    try:
+        with open(artifact) as f:
+            results = json.load(f)
+    except (OSError, ValueError):
+        results = {}
+    results.update(rows)
+    with open(artifact, "w") as f:
+        json.dump(results, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vikin-mlp3",
+                    choices=sorted(VIKIN_ARCHS))
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--impl", default="jnp")
+    ap.add_argument("--sweep-events", type=int, default=256)
+    ap.add_argument("--burst-events", type=int, default=320)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI overload smoke (interpret kernels, tiny "
+                         "bursty trace, asserts bound+sheds+no-crash; "
+                         "does not write the artifact)")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    rows = run(args.arch, n_slots=args.slots, impl=args.impl,
+               sweep_events=args.sweep_events,
+               burst_events=args.burst_events, seed=args.seed)
+    sw = rows[f"openloop:sweep:{args.arch}"]
+    print(f"openloop:sweep:{args.arch}: capacity ~"
+          f"{sw['capacity_rps_estimate']:.0f} req/s, knee at "
+          f"{sw['knee_offered_mult']}x offered")
+    for p in sw["points"]:
+        print(f"  {p['offered_mult']:>5.2f}x: offered "
+              f"{p['offered_rps']:>8.0f} achieved {p['achieved_rps']:>8.0f} "
+              f"req/s, p50/p95/p99 {p['p50_latency_s']*1e6:.1f}/"
+              f"{p['p95_latency_s']*1e6:.1f}/{p['p99_latency_s']*1e6:.1f} "
+              f"us, hwm {p['queue_depth_hwm']}")
+    bu = rows[f"openloop:burst:{args.arch}"]
+    print(f"openloop:burst:{args.arch}: unbounded goodput "
+          f"{bu['unbounded']['goodput_rps']:.0f} -> shed "
+          f"{bu['shed']['goodput_rps']:.0f} req/s "
+          f"({bu['goodput_gain']:.2f}x, shed={bu['shed']['shed']}, "
+          f"hwm {bu['shed']['queue_depth_hwm']} <= "
+          f"max_queue {bu['max_queue']}, "
+          f"bound_respected={bu['shed']['bound_respected']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,18 @@ CPU, force the device count before jax initializes:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
       --devices 4 --requests 8 --impl pallas_interpret
+
+``--trace`` replays a seeded arrival trace (runtime/loadgen.py) OPEN-loop
+on the simulated clock -- arrivals land on the trace's schedule whether or
+not the engine keeps up -- with ``--max-queue``/``--admission``/
+``--drop-expired`` selecting the overload policy (DESIGN.md Sec. 15):
+
+  PYTHONPATH=src python -m repro.runtime.loadgen --kind bursty \
+      --arch vikin-small --load 2.0 --events 48 --deadline 0.0001 \
+      --out /tmp/trace.json
+  PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
+      --trace /tmp/trace.json --max-queue 6 --admission shed \
+      --drop-expired --slots 2 --impl pallas_interpret
 """
 from __future__ import annotations
 
@@ -114,7 +126,19 @@ def _serve_vikin(args, models):
               f"under policy {args.policy!r}")
     else:
         backend = next(iter(backends.values()))
-    eng = Engine(backend, n_slots=args.slots, policy=args.policy)
+    try:
+        eng = Engine(backend, n_slots=args.slots, policy=args.policy,
+                     max_queue=args.max_queue, admission=args.admission,
+                     drop_expired=args.drop_expired)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    if eng.max_queue is not None:
+        print(f"admission control: policy {eng.admission!r}, "
+              f"max_queue {eng.max_queue} per workload"
+              + (", expired queued requests dropped" if eng.drop_expired
+                 else ""))
+    if args.trace:
+        return _replay_trace(args, eng)
 
     rng = np.random.default_rng(0)
     rids = {}
@@ -152,6 +176,45 @@ def _serve_vikin(args, models):
         print(f"  array: {args.devices} chips, "
               f"{s['chip_cycles']:.0f} per-chip compute cycles + "
               f"{s['comm_cycles']:.0f} scatter/gather cycles")
+
+
+def _replay_trace(args, eng):
+    """Open-loop replay of a trace file (runtime/loadgen.py) on the
+    deterministic simulated clock: arrivals land on the trace's schedule
+    whether or not the engine keeps up, so this is the overload /
+    load-testing entry point (DESIGN.md Sec. 15)."""
+    from repro.runtime.loadgen import Trace, replay
+
+    trace = Trace.load(args.trace)
+    print(f"replaying {args.trace}: {len(trace.events)} arrivals over "
+          f"{trace.horizon_s*1e3:.3f} ms ({trace.offered_rps():.0f} req/s "
+          f"offered), sha256 {trace.sha256()[:16]}...")
+    rep = replay(eng, trace, mode="sim")
+    print(f"\noffered {rep['offered']} -> submitted {rep['submitted']}, "
+          f"completed {rep['completed']} "
+          f"(rejected {rep['rejected']}, shed {rep['shed']}, "
+          f"expired {rep['expired']})")
+    met = rep["deadline_met"]
+    print(f"throughput: offered {rep['offered_rps']:.0f} req/s, achieved "
+          f"{rep['achieved_rps']:.0f} req/s, goodput "
+          f"{rep['goodput_rps']:.0f} req/s"
+          + (f" ({met}/{rep['completed']} met deadline, "
+             f"{rep['deadline_misses']} misses)" if met is not None else ""))
+    print(f"end-to-end latency (sim): p50 {rep['p50_latency_s']*1e6:.1f} / "
+          f"p95 {rep['p95_latency_s']*1e6:.1f} / "
+          f"p99 {rep['p99_latency_s']*1e6:.1f} us")
+    print(f"queue depth high-water mark: {rep['queue_depth_hwm']}"
+          + (f" (bound {eng.max_queue} "
+             f"{'respected' if rep['bound_respected'] else 'EXCEEDED'})"
+             if eng.max_queue is not None else " (unbounded)"))
+    ov = eng.overload_stats()
+    for kind in ("rejected", "shed", "expired"):
+        if eng.stats[kind]:
+            print(f"  {kind}: by_workload={ov[kind]['by_workload']} "
+                  f"by_priority={ov[kind]['by_priority']}")
+    if rep["incomplete"]:
+        print("WARNING: replay ended with work still in flight "
+              "(max_ticks or stalled admission)")
 
 
 def _serve_transformer(args, cfg):
@@ -218,6 +281,21 @@ def main():
                     help="vikin archs: data-parallel serving over N devices "
                          "(runtime/sharded; outputs bitwise identical to "
                          "--devices 1)")
+    ap.add_argument("--trace", default=None,
+                    help="vikin archs: replay this arrival-trace JSON "
+                         "(python -m repro.runtime.loadgen) OPEN-loop on "
+                         "the simulated clock instead of a closed burst")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound each workload queue at N pending requests "
+                         "(admission control, DESIGN.md Sec. 15)")
+    ap.add_argument("--admission", default="unbounded",
+                    choices=["unbounded", "reject", "shed"],
+                    help="full-queue policy: reject the newcomer, or shed "
+                         "the lowest-priority queued request (needs "
+                         "--max-queue)")
+    ap.add_argument("--drop-expired", action="store_true",
+                    help="shed queued requests whose deadline already "
+                         "passed instead of serving them dead")
     args = ap.parse_args()
 
     from repro.configs.registry import get_serving_config
@@ -244,6 +322,15 @@ def main():
                 f"--devices is vikin-only (runtime/sharded); serving "
                 f"{args.arch!r} would silently run single-device. Drop "
                 f"the flag or serve a vikin-* workload")
+        if args.trace:
+            raise SystemExit(
+                f"--trace is vikin-only (runtime/loadgen replays on the "
+                f"simulated VIKIN clock); {args.arch!r} has no simulated "
+                f"cycle model to replay against")
+        if args.max_queue is not None or args.admission != "unbounded":
+            raise SystemExit(
+                "--max-queue/--admission are vikin-only here; the "
+                "transformer Server keeps the unbounded back-compat path")
         _serve_transformer(args, resolved[0][1])
 
 

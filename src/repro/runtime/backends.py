@@ -61,12 +61,18 @@ class Request:
     ``output``.  ``result()`` returns whichever the backend produced.
 
     Scheduling fields (runtime/scheduler.py): ``priority`` (higher is more
-    urgent; ties broken by arrival), ``deadline_s`` (wall-clock budget from
-    submission; the engine counts misses in ``stats["deadline_misses"]``
-    and stamps ``met_deadline``), and ``workload`` (which of a
-    MultiWorkloadBackend's models serves this request; None for
-    single-workload engines).  The ``t_*``/``sim_*`` stamps feed the
-    engine's queue-wait / service-latency percentiles in both clocks.
+    urgent; ties broken by arrival), ``deadline_s`` (engine-clock budget
+    from submission; the engine counts misses in
+    ``stats["deadline_misses"]`` -- at queue-expiry time, not only at
+    completion -- and stamps ``met_deadline``), and ``workload`` (which of
+    a MultiWorkloadBackend's models serves this request; None for
+    single-workload engines).  Overload outcomes (DESIGN.md Sec. 15):
+    ``shed`` marks a request evicted by shed admission, ``expired`` one
+    dropped past its deadline while queued -- either way it never runs and
+    has no result; ``miss_counted`` guards the deadline-miss counter
+    against double counting across the queue-expiry scan and the
+    completion check.  The ``t_*``/``sim_*`` stamps feed the engine's
+    queue-wait / service-latency percentiles in both clocks.
     """
 
     rid: int
@@ -80,6 +86,9 @@ class Request:
     deadline_s: Optional[float] = None
     workload: Optional[str] = None
     met_deadline: Optional[bool] = None
+    shed: bool = False
+    expired: bool = False
+    miss_counted: bool = False
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_done: float = 0.0
@@ -268,6 +277,11 @@ class VikinBackend(ModelBackend):
         # staging buffer of request inputs, one lane per slot
         return np.zeros((n_slots, self.n_in), np.float32)
 
+    def input_dim(self, workload: Optional[str] = None) -> int:
+        """Feature width a request payload must have (trace replay uses
+        this to synthesize payloads from per-event seeds)."""
+        return self.n_in
+
     def validate(self, req: Request) -> None:
         vec = np.asarray(req.prompt, np.float32).reshape(-1)
         if vec.shape[0] != self.n_in:
@@ -363,6 +377,14 @@ class MultiWorkloadBackend(ModelBackend):
         requests in (scheduler's zero-padding-waste signal)."""
         b = self.backends[workload]
         return b.bucket(n_active) if hasattr(b, "bucket") else n_active
+
+    def input_dim(self, workload: Optional[str] = None) -> int:
+        """Feature width of the named workload's payloads (trace replay)."""
+        if workload not in self.backends:
+            raise ValueError(
+                f"input_dim: unknown workload {workload!r}; this engine "
+                f"serves {sorted(self.backends)}")
+        return self.backends[workload].input_dim()
 
     def init_state(self, n_slots: int, max_len: int):
         return {n: b.init_state(n_slots, max_len)

@@ -57,6 +57,12 @@ class SchedContext:
     from the previous served batch (None = cold).  ``bucket_for(w, k)``
     returns the padded batch bucket workload ``w`` would run ``k``
     requests in (== k for backends without a padding concept).
+    ``max_queue`` is the per-workload admission bound (None = unbounded,
+    DESIGN.md Sec. 15): every queue a policy sees has length <= max_queue,
+    so deeper backlog was already rejected or shed at submit time.
+    ``now`` is the ENGINE clock (wall by default, the simulated trace
+    clock under open-loop replay), so deadline decisions stay
+    deterministic when the engine is driven by runtime/loadgen.
     """
 
     queues: Dict[Optional[str], List[Request]]
@@ -65,6 +71,7 @@ class SchedContext:
     hw_mode: Optional[ExecMode]
     plans: Dict[Optional[str], ModePlan]
     bucket_for: Callable[[Optional[str], int], int]
+    max_queue: Optional[int] = None
     now: float = dataclasses.field(default_factory=time.perf_counter)
 
 
@@ -80,6 +87,13 @@ class BatchPolicy:
 def _overdue(req: Request, now: float) -> bool:
     return (req.deadline_s is not None
             and now - req.t_submit > req.deadline_s)
+
+
+def shed_candidate(reqs: List[Request]) -> Request:
+    """The request a full queue gives up first (shed admission,
+    DESIGN.md Sec. 15): lowest priority; newest arrival among ties, so
+    work already waiting keeps its place over a same-priority newcomer."""
+    return min(reqs, key=lambda r: (r.priority, -r.rid))
 
 
 def _abs_deadline(req: Request) -> float:

@@ -1,0 +1,188 @@
+"""Trace generation + open-loop replay (runtime/loadgen, DESIGN.md
+Sec. 15): seeded determinism, bit-for-bit JSON round-trips, and
+deterministic simulated-clock replay through the engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.models.ffn import vikin_stack_init
+from repro.runtime.backends import MultiWorkloadBackend, VikinBackend
+from repro.runtime.loadgen import (
+    SimClock,
+    Trace,
+    bursty_trace,
+    estimate_capacity_rps,
+    poisson_trace,
+    replay,
+)
+from repro.runtime.server import Engine
+
+
+def _engine(arch="vikin-small", n_slots=2, seed=0, **kw):
+    model = VIKIN_ARCHS[arch]
+    params = vikin_stack_init(jax.random.key(seed), model)
+    return Engine(VikinBackend(model, params, impl="jnp"),
+                  n_slots=n_slots, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_is_seeded_and_sorted():
+    a = poisson_trace(1000.0, 50, seed=3)
+    b = poisson_trace(1000.0, 50, seed=3)
+    c = poisson_trace(1000.0, 50, seed=4)
+    assert a.events == b.events
+    assert a.events != c.events
+    ts = [e.t for e in a.events]
+    assert ts == sorted(ts) and len(ts) == 50
+    assert a.offered_rps() == pytest.approx(50 / a.horizon_s)
+
+
+def test_trace_json_roundtrip_bit_for_bit():
+    tr = poisson_trace(
+        500.0, 20, seed=1,
+        workloads=[("vikin-kan2", 2.0), ("vikin-mlp3", 1.0)],
+        priority_classes=[(0, 0.5, 0.01), (3, 0.5, None)])
+    back = Trace.from_json(tr.to_json())
+    assert back.events == tr.events and back.meta == tr.meta
+    assert back.to_json() == tr.to_json()
+    assert back.sha256() == tr.sha256()
+
+
+def test_trace_save_load(tmp_path):
+    tr = bursty_trace(100.0, 800.0, 30, mean_calm_s=0.05,
+                      mean_burst_s=0.02, seed=9)
+    path = str(tmp_path / "trace.json")
+    tr.save(path)
+    assert Trace.load(path).sha256() == tr.sha256()
+
+
+def test_bursty_trace_has_burst_structure():
+    """Inter-arrival gaps must be a heavy mixture: most events arrive at
+    the 50x burst rate while rare calm-state gaps are ~50x longer, so the
+    mean gap sits far above the median.  A pure exponential's
+    mean/median is 1/ln2 ~ 1.44; the mixture's is much larger."""
+    tr = bursty_trace(100.0, 5000.0, 400, mean_calm_s=0.1,
+                      mean_burst_s=0.05, seed=0)
+    gaps = np.diff([e.t for e in tr.events])
+    assert np.mean(gaps) / np.median(gaps) > 1.9
+    assert tr.meta["kind"] == "bursty"
+
+
+def test_trace_generators_validate_inputs():
+    with pytest.raises(ValueError):
+        poisson_trace(0.0, 10)
+    with pytest.raises(ValueError):
+        poisson_trace(100.0, 0)
+    with pytest.raises(ValueError):
+        bursty_trace(100.0, -1.0, 10, mean_calm_s=1.0, mean_burst_s=1.0)
+    with pytest.raises(ValueError):
+        bursty_trace(100.0, 200.0, 10, mean_calm_s=0.0, mean_burst_s=1.0)
+
+
+def test_trace_class_mixes_are_drawn():
+    tr = poisson_trace(
+        1000.0, 200, seed=5,
+        workloads=[("a", 1.0), ("b", 1.0)],
+        priority_classes=[(0, 0.5, 0.01), (2, 0.5, 0.02)])
+    assert {e.workload for e in tr.events} == {"a", "b"}
+    assert {e.priority for e in tr.events} == {0, 2}
+    assert {e.deadline_s for e in tr.events} == {0.01, 0.02}
+    seeds = [e.seed for e in tr.events]
+    assert len(set(seeds)) > 150        # per-event payload seeds differ
+
+
+# ---------------------------------------------------------------------------
+# Capacity estimate + SimClock
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_capacity_matches_cycle_model():
+    from repro.core.engine import VikinHW, serving_report
+
+    model = VIKIN_ARCHS["vikin-mlp3"]
+    cap = estimate_capacity_rps(model, n_slots=8)
+    cold = serving_report(model.layer_works(), VikinHW(), batch=8)
+    steady = serving_report(model.layer_works(), VikinHW(), batch=8,
+                            prev_mode=cold.get("exit_mode"))
+    assert cap == pytest.approx(8 / steady["sim_latency_s"])
+
+
+def test_sim_clock_tracks_engine_and_jumps():
+    eng = _engine()
+    clk = SimClock(eng)
+    assert clk.now() == 0.0
+    clk.jump_to(0.5)
+    assert clk.now() == pytest.approx(0.5)
+    clk.jump_to(0.25)                   # never rewinds
+    assert clk.now() == pytest.approx(0.5)
+    eng.stats["sim_latency_s"] = 0.1    # engine work advances the clock
+    assert clk.now() == pytest.approx(0.6)
+
+
+# ---------------------------------------------------------------------------
+# Open-loop replay
+# ---------------------------------------------------------------------------
+
+
+def test_replay_sim_completes_and_is_deterministic():
+    tr = poisson_trace(0.5 * estimate_capacity_rps(
+        VIKIN_ARCHS["vikin-small"], n_slots=2), 24, seed=2)
+    rep1 = replay(_engine(), tr, mode="sim")
+    rep2 = replay(_engine(), tr, mode="sim")
+    assert rep1 == rep2                 # fresh engine, identical report
+    assert rep1["completed"] == 24 and not rep1["incomplete"]
+    assert rep1["rejected"] == rep1["shed"] == rep1["expired"] == 0
+    assert rep1["achieved_rps"] > 0
+    assert (rep1["p99_latency_s"] >= rep1["p95_latency_s"]
+            >= rep1["p50_latency_s"] > 0.0)
+    # no deadlines in the trace: goodput degenerates to throughput
+    assert rep1["deadline_met"] is None
+    assert rep1["goodput_rps"] == rep1["achieved_rps"]
+
+
+def test_replay_overload_sheds_and_respects_bound():
+    cap = estimate_capacity_rps(VIKIN_ARCHS["vikin-small"], n_slots=2)
+    batch_s = 2 / cap
+    tr = bursty_trace(1.0 * cap, 6.0 * cap, 40,
+                      mean_calm_s=8 * batch_s, mean_burst_s=24 * batch_s,
+                      seed=0,
+                      priority_classes=[(0, 1.0, 4 * batch_s)])
+    rep = replay(_engine(max_queue=4, admission="shed",
+                         drop_expired=True), tr, mode="sim")
+    assert rep["shed"] > 0
+    assert rep["bound_respected"] and rep["queue_depth_hwm"] <= 4
+    assert rep["completed"] + rep["shed"] + rep["expired"] >= 40 - rep["rejected"]
+    assert not rep["incomplete"]
+    # every completion the bounded engine kept met its deadline budget
+    assert rep["goodput_rps"] <= rep["achieved_rps"]
+
+
+def test_replay_multi_workload_trace():
+    archs = ("vikin-kan2", "vikin-mlp3")
+    backends = {}
+    for a in archs:
+        m = VIKIN_ARCHS[a]
+        backends[a] = VikinBackend(
+            m, vikin_stack_init(jax.random.key(0), m), impl="jnp")
+    eng = Engine(MultiWorkloadBackend(backends), n_slots=2)
+    cap = estimate_capacity_rps(VIKIN_ARCHS["vikin-mlp3"], n_slots=2)
+    tr = poisson_trace(0.25 * cap, 16, seed=1,
+                       workloads=[(a, 1.0) for a in archs])
+    rep = replay(eng, tr, mode="sim")
+    assert rep["completed"] == 16 and not rep["incomplete"]
+
+
+def test_replay_wall_mode_smoke():
+    tr = poisson_trace(5000.0, 8, seed=0)
+    rep = replay(_engine(), tr, mode="wall")
+    assert rep["mode"] == "wall" and rep["completed"] == 8
+
+
+def test_replay_rejects_bad_mode():
+    with pytest.raises(ValueError, match="mode"):
+        replay(_engine(), poisson_trace(100.0, 2), mode="warp")

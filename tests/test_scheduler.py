@@ -152,7 +152,7 @@ def test_deadline_accounting_counts_misses():
                               params["vikin-kan2"], impl="jnp"),
                  n_slots=2)
     rng = np.random.default_rng(0)
-    missed = eng.submit(rng.random(72, dtype=np.float32), deadline_s=0.0)
+    missed = eng.submit(rng.random(72, dtype=np.float32), deadline_s=1e-9)
     met = eng.submit(rng.random(72, dtype=np.float32), deadline_s=600.0)
     free = eng.submit(rng.random(72, dtype=np.float32))
     reqs = {rid: eng._requests[rid] for rid in (missed, met, free)}
@@ -172,7 +172,7 @@ def test_overdue_deadline_preempts_mode_affinity():
     kan = [eng.submit(rng.random(72, dtype=np.float32),
                       workload="vikin-kan2") for _ in range(4)]
     late = eng.submit(rng.random(72, dtype=np.float32),
-                      workload="vikin-mlp3", deadline_s=0.0)
+                      workload="vikin-mlp3", deadline_s=1e-9)
     reqs = {rid: eng._requests[rid] for rid in kan + [late]}
     eng.run_until_done()
     # the overdue mlp request was admitted before the kan queue drained
