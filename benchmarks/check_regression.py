@@ -275,6 +275,44 @@ def check_serving(base: Dict, fresh: Dict, f: Findings,
                              r.get(side, {}).get(k), rtol)
             _cmp(f, f"{name}.array_cycle_speedup", b["array_cycle_speedup"],
                  r.get("array_cycle_speedup"), rtol)
+        elif name.startswith("quant:"):
+            # int8 quantized serving row (DESIGN.md Sec. 16): the gated
+            # fields are count-independent -- per-request cycles and the
+            # analytical batch=1 DMA bytes from the precision-aware cycle
+            # model -- plus the row's structural claims: int8 DMA must stay
+            # at <= half the f32 bytes, batched int8 serving must stay
+            # bitwise identical to single-request serving, and the fresh
+            # (training-dependent) mse_ratio must stay under the committed
+            # bound.  The measured mse itself never gates (CI re-trains at
+            # smaller step counts).
+            for side in ("dense", "int8"):
+                for k in ("sim_cycles_per_req", "dma_bytes_per_req"):
+                    _cmp(f, f"{name}.{side}.{k}", b[side][k],
+                         r.get(side, {}).get(k), rtol)
+            _cmp(f, f"{name}.dma_ratio", b["dma_ratio"],
+                 r.get("dma_ratio"), rtol)
+            if not r.get("dma_ratio", 1.0) <= 0.5:
+                f.fail(f"{name}.dma_ratio",
+                       f"int8 DMA bytes ({r.get('dma_ratio')}x f32) no "
+                       f"longer <= 0.5x the f32 baseline")
+            if r.get("mse_ratio_bound") != b["mse_ratio_bound"]:
+                f.fail(f"{name}.mse_ratio_bound",
+                       f"committed bound changed: {b['mse_ratio_bound']} "
+                       f"-> {r.get('mse_ratio_bound')}")
+            if not (r.get("mse_ratio", float("inf"))
+                    <= b["mse_ratio_bound"]):
+                f.fail(f"{name}.mse_ratio",
+                       f"int8 served mse ratio {r.get('mse_ratio')} "
+                       f"exceeds the committed bound "
+                       f"{b['mse_ratio_bound']}")
+            if r.get("batched_equals_single") is not True:
+                f.fail(f"{name}.batched_equals_single",
+                       "int8 batched serving no longer bitwise-identical "
+                       "to single-request serving")
+            if r.get("mask_keep_rates") != b["mask_keep_rates"]:
+                f.fail(f"{name}.mask_keep_rates",
+                       f"{b['mask_keep_rates']} -> "
+                       f"{r.get('mask_keep_rates')}")
         elif name.startswith("trained:"):
             for side in ("dense", "sparse"):
                 _cmp(f, f"{name}.{side}.sim_cycles_per_req",

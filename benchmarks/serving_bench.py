@@ -19,6 +19,13 @@ Sec. 12): the same trained stack served dense and two-stage-sparsified, with
 served-output accuracy and simulated cycles side by side -- the paper's
 "speedup at small accuracy loss" claim measured through the engine.
 
+It also emits a ``quant:*`` row (DESIGN.md Sec. 16): the same trained stack
+served dense at f32 and two-stage-sparse at int8 (calibrated scales from
+the mask-calibration batch), pinning served accuracy (mse ratio against a
+committed bound), per-request cycles, the precision-aware DMA bytes
+(int8 <= 0.5x f32), and that int8 batched serving stays bitwise identical
+to single-request serving.
+
 With more than one visible device (or ``--devices N`` under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU), it
 additionally emits ``sharded:*`` rows (DESIGN.md Sec. 13): the same burst
@@ -208,11 +215,17 @@ def sharded_single_vs_multi(arch: str, *, devices: int, n_requests: int = 32,
 
 
 def _served_mse(model, params, masks, val_x, val_y, *, n_slots: int,
-                impl: str) -> Dict[str, float]:
+                impl: str, precision: str = "f32",
+                scales=None) -> Dict[str, float]:
     """Accuracy measured THROUGH the serving path: submit the val set as
     requests, compare engine outputs against targets (the served-accuracy
-    protocol of DESIGN.md Sec. 12)."""
-    backend = VikinBackend(model, params, impl=impl, masks=masks)
+    protocol of DESIGN.md Sec. 12).  ``dma_bytes_per_req`` is the
+    analytical batch=1 figure from the precision-aware cycle model
+    (count-independent, so it can gate in check_regression)."""
+    from repro.core.engine import serving_report
+
+    backend = VikinBackend(model, params, impl=impl, masks=masks,
+                           precision=precision, scales=scales)
     eng = Engine(backend, n_slots=n_slots)
     rids = [eng.submit(val_x[i]) for i in range(val_x.shape[0])]
     out = eng.run_until_done()
@@ -221,6 +234,9 @@ def _served_mse(model, params, masks, val_x, val_y, *, n_slots: int,
     return {
         "val_mse": float(np.mean((pred - val_y) ** 2)),
         "sim_cycles_per_req": s["sim_cycles"] / max(s["served"], 1),
+        "dma_bytes_per_req": serving_report(
+            backend.layers, backend.hw, batch=1,
+            precision=precision)["dma_bytes"],
     }
 
 
@@ -267,6 +283,95 @@ def trained_dense_vs_sparse(arch: str = "vikin-mlp3", *, steps: int = 150,
     }
 
 
+# served-accuracy bound for the quant:* row: int8-sparse val mse may not
+# exceed this multiple of the dense-f32 val mse.  The bound itself is the
+# committed, count-independent contract (check_regression compares it for
+# equality and re-asserts the fresh mse_ratio against it); the measured
+# ratio is training-dependent and does not gate directly.
+QUANT_MSE_RATIO_BOUND = 2.0
+
+
+def quant_dense_vs_int8(arch: str = "vikin-small", *, steps: int = 150,
+                        n_val: int = 64, n_slots: int = 8,
+                        impl: str = "jnp", seed: int = 0) -> Dict:
+    """Train -> calibrate (masks + scales) -> serve dense-f32 vs sparse-int8.
+
+    The int8 analogue of ``trained_dense_vs_sparse`` (DESIGN.md Sec. 16):
+    the same trained stack served through the engine at f32 dense and at
+    int8 with two-stage masks, with served accuracy (mse ratio), simulated
+    cycles and the precision-aware DMA bytes side by side.  Also pins that
+    int8 batched serving stays bitwise identical to single-request serving
+    (the bucket determinism contract survives quantization).
+    """
+    import dataclasses
+
+    from repro.core.calibrate import (
+        calibrate_scales,
+        calibrate_stack,
+        keep_per_group_for_rate,
+    )
+    from repro.data.stack_task import task_for_model
+    from repro.runtime.trainer import StackTrainer, StackTrainerConfig
+
+    model = VIKIN_ARCHS[arch]
+    rate = model.pattern_rate or 0.5
+    data = task_for_model(model, seed=seed)
+    trainer = StackTrainer(model, data, StackTrainerConfig(
+        steps=steps, batch_size=64, impl=impl, seed=seed,
+        log_every=max(1, steps)))
+    trained = trainer.run()
+    calib_x = data["train_x"][:256]
+    sp = calibrate_stack(trained["params"], model, calib_x,
+                         keep_per_group=keep_per_group_for_rate(rate),
+                         impl=impl)
+    # scales from the SAME calibration batch as the masks (Sec. 16)
+    scales = calibrate_scales(trained["params"], model, calib_x, impl=impl)
+    dense_model = dataclasses.replace(model, pattern_rate=0.0)
+    val_x = data["val_x"][:n_val]
+    val_y = data["val_y"][:n_val]
+    dense = _served_mse(dense_model, trained["params"], None, val_x, val_y,
+                        n_slots=n_slots, impl=impl)
+    int8 = _served_mse(dense_model, trained["params"], list(sp.masks),
+                       val_x, val_y, n_slots=n_slots, impl=impl,
+                       precision="int8", scales=scales)
+
+    # int8 batched == single bitwise: serve the first few requests one at
+    # a time through a fresh engine and compare against a batched burst
+    backend = VikinBackend(dense_model, trained["params"], impl=impl,
+                           masks=list(sp.masks), precision="int8",
+                           scales=scales)
+    n_chk = min(8, n_val)
+    eng = Engine(backend, n_slots=n_slots)
+    rids = [eng.submit(val_x[i]) for i in range(n_chk)]
+    batched = eng.run_until_done()
+    singles = []
+    for i in range(n_chk):
+        eng1 = Engine(VikinBackend(dense_model, trained["params"],
+                                   impl=impl, masks=list(sp.masks),
+                                   precision="int8", scales=scales),
+                      n_slots=1)
+        rid1 = eng1.submit(val_x[i])
+        singles.append(eng1.run_until_done()[rid1])
+    batched_eq = all(np.array_equal(batched[rid], singles[i])
+                     for i, rid in enumerate(rids))
+
+    mse_ratio = int8["val_mse"] / max(dense["val_mse"], 1e-12)
+    return {
+        "arch": arch, "task": data["task"], "train_steps": steps,
+        "pattern_rate": rate,
+        "mask_keep_rates": sp.summary()["keep_rates"],
+        "dense": dense, "int8": int8,
+        "cycle_speedup": (dense["sim_cycles_per_req"]
+                          / max(int8["sim_cycles_per_req"], 1e-9)),
+        "dma_ratio": (int8["dma_bytes_per_req"]
+                      / max(dense["dma_bytes_per_req"], 1e-9)),
+        "mse_ratio": mse_ratio,
+        "mse_ratio_bound": QUANT_MSE_RATIO_BOUND,
+        "mse_within_bound": bool(mse_ratio <= QUANT_MSE_RATIO_BOUND),
+        "batched_equals_single": bool(batched_eq),
+    }
+
+
 def run(n_requests: int = 32, n_slots: int = 8,
         archs=("vikin-kan2", "vikin-mlp3", "vikin-mixed"),
         trained: bool = True, train_steps: int = 150,
@@ -309,6 +414,8 @@ def run(n_requests: int = 32, n_slots: int = 8,
     if trained:
         row = trained_dense_vs_sparse(steps=train_steps, n_slots=n_slots)
         results[f"trained:{row['arch']}"] = row
+        qrow = quant_dense_vs_int8(steps=train_steps, n_slots=n_slots)
+        results[f"quant:{qrow['arch']}"] = qrow
     # openloop:* rows belong to benchmarks/loadgen_bench.py -- always carry
     # the committed ones forward so a serving_bench refresh never deletes
     # them from the gated artifact (run loadgen_bench after to refresh)
@@ -367,6 +474,16 @@ def main() -> None:
                   f"{r['sparse']['sim_cycles_per_req']:.0f} cyc "
                   f"({r['cycle_speedup']:.2f}x cycles, "
                   f"{r['mse_ratio']:.3f}x mse)")
+            continue
+        if a.startswith("quant:"):
+            print(f"{a}: dense-f32 mse {r['dense']['val_mse']:.5f} / "
+                  f"{r['dense']['dma_bytes_per_req']:.0f} B -> sparse-int8 "
+                  f"mse {r['int8']['val_mse']:.5f} / "
+                  f"{r['int8']['dma_bytes_per_req']:.0f} B "
+                  f"({r['dma_ratio']:.2f}x dma bytes, "
+                  f"{r['mse_ratio']:.3f}x mse <= bound "
+                  f"{r['mse_ratio_bound']}, batched_equals_single="
+                  f"{r['batched_equals_single']})")
             continue
         print(f"{a},{r['requests']},{r['wall_rps']:.1f},"
               f"{r['sim_cycles_per_req']:.0f},{r['sim_rps']:.0f},"

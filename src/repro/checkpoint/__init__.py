@@ -5,9 +5,10 @@ from repro.checkpoint.checkpoint import (
     latest_step,
     restore_checkpoint,
     restore_masks,
+    restore_scales,
     save_checkpoint,
 )
 
 __all__ = ["AsyncCheckpointer", "CheckpointMismatchError", "all_steps",
            "latest_step", "restore_checkpoint", "restore_masks",
-           "save_checkpoint"]
+           "restore_scales", "save_checkpoint"]

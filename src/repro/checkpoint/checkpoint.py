@@ -39,6 +39,7 @@ PyTree = Any
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 _MASK_FILE = "masks.npz"
+_SCALE_FILE = "scales.npz"
 
 
 class CheckpointMismatchError(ValueError):
@@ -53,10 +54,17 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
 
 
 def _unflatten_into(target: PyTree, flat: Dict[str, np.ndarray],
-                    ctx: str = "checkpoint") -> PyTree:
+                    ctx: str = "checkpoint", cast: bool = False) -> PyTree:
     """Rebuild ``target``'s structure from ``flat``; every incompatibility
-    (missing / unexpected leaves, shape mismatches) is collected and raised
-    as ONE CheckpointMismatchError naming each offending key."""
+    (missing / unexpected leaves, shape AND dtype mismatches) is collected
+    and raised as ONE CheckpointMismatchError naming each offending key.
+
+    ``cast=True`` opts back into coercing saved leaves to the target's
+    dtypes (e.g. deliberately loading f32 weights into a bf16 template);
+    the default refuses, because a silent astype turns a precision bug
+    into wrong numerics with no trace (an int8-quantized leaf restored
+    into an f32 template would "work" while serving garbage scales).
+    """
     paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     target_keys = {jax.tree_util.keystr(path) for path, _ in paths}
     problems: List[str] = []
@@ -70,6 +78,11 @@ def _unflatten_into(target: PyTree, flat: Dict[str, np.ndarray],
                 f"shape mismatch at {key}: checkpoint has "
                 f"{tuple(flat[key].shape)}, target wants "
                 f"{tuple(leaf.shape)}")
+        elif not cast and flat[key].dtype != np.dtype(leaf.dtype):
+            problems.append(
+                f"dtype mismatch at {key}: checkpoint has "
+                f"{flat[key].dtype}, target wants {np.dtype(leaf.dtype)} "
+                f"(pass cast=True to coerce deliberately)")
     if problems:
         # extra checkpoint-only leaves are legal (partial restore, e.g.
         # params out of a full train state) but worth naming when the
@@ -83,7 +96,8 @@ def _unflatten_into(target: PyTree, flat: Dict[str, np.ndarray],
         raise CheckpointMismatchError(
             f"{ctx} does not match the restore target "
             f"({len(problems)} problem(s)):\n  " + "\n  ".join(problems))
-    leaves = [flat[jax.tree_util.keystr(path)].astype(leaf.dtype)
+    leaves = [flat[jax.tree_util.keystr(path)].astype(leaf.dtype) if cast
+              else flat[jax.tree_util.keystr(path)]
               for path, leaf in paths]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -96,12 +110,18 @@ def save_checkpoint(
     extra: Optional[Dict[str, Any]] = None,
     keep: Optional[int] = None,
     masks: Optional[Sequence[Any]] = None,
+    scales: Optional[Any] = None,
 ) -> str:
     """Atomically write ``tree`` (+ json-serializable ``extra``) at ``step``.
 
     ``masks``: optional per-layer sparsity masks (core/sparsity.PatternMask
     or None entries); their bool keep arrays land in ``masks.npz`` inside
     the same atomic commit, restored bit-exact by ``restore_masks``.
+
+    ``scales``: optional core/quant.StackScales; the per-layer symmetric
+    quantization scales land in ``scales.npz`` inside the SAME atomic
+    commit as params and masks (all three come from one calibration pass
+    and must never drift apart), restored bit-exact by ``restore_scales``.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f".tmp.{step}")
@@ -127,6 +147,20 @@ def save_checkpoint(
         manifest["masks"] = {
             "n_layers": len(masks),
             "present": [i for i, m in enumerate(masks) if m is not None],
+        }
+    if scales is not None:
+        scale_arrays: Dict[str, np.ndarray] = {}
+        for i, ls in enumerate(scales.scales):
+            scale_arrays[f"x_{i}"] = np.asarray(ls.x, np.float32)
+            if ls.kind == "mlp":
+                scale_arrays[f"w_{i}"] = np.asarray(ls.w, np.float32)
+            else:
+                scale_arrays[f"wb_{i}"] = np.asarray(ls.w_b, np.float32)
+                scale_arrays[f"t_{i}"] = np.asarray(ls.t, np.float32)
+        np.savez(os.path.join(tmp, _SCALE_FILE), **scale_arrays)
+        manifest["scales"] = {
+            "n_layers": len(scales.scales),
+            "kinds": [ls.kind for ls in scales.scales],
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
@@ -165,12 +199,18 @@ def restore_checkpoint(
     *,
     step: Optional[int] = None,
     shardings: Optional[PyTree] = None,
+    cast: bool = False,
 ):
     """Restore into ``target``'s structure; optionally re-shard elastically.
 
     ``shardings``: pytree of jax.sharding.Sharding (or a single one) matching
     target -- each leaf is device_put with it, so the restore lands directly
     on the current mesh regardless of the mesh it was saved from.
+
+    ``cast``: dtype handling for saved leaves whose dtype differs from the
+    target's.  False (default) raises CheckpointMismatchError naming every
+    offending key; True coerces with astype (the old silent behavior, now
+    an explicit opt-in for deliberate precision changes).
     Returns (tree, step, extra).
     """
     if step is None:
@@ -182,7 +222,7 @@ def restore_checkpoint(
         manifest = json.load(f)
     with np.load(os.path.join(d, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
-    tree = _unflatten_into(target, flat, ctx=f"checkpoint {d}")
+    tree = _unflatten_into(target, flat, ctx=f"checkpoint {d}", cast=cast)
     if shardings is not None:
         if isinstance(shardings, jax.sharding.Sharding):
             tree = jax.tree.map(
@@ -217,6 +257,62 @@ def restore_masks(ckpt_dir: str, *, step: Optional[int] = None
         for i in meta["present"]:
             masks[i] = PatternMask(np.asarray(z[f"mask_{i}"], np.bool_))
     return masks
+
+
+def restore_scales(ckpt_dir: str, *, step: Optional[int] = None):
+    """Rebuild the core/quant.StackScales saved with ``scales=...``.
+
+    Returns None when the checkpoint carries no scales (an unquantized
+    model).  Every scale array is validated against the manifest's layer
+    kinds; a malformed entry (missing key, wrong rank/shape, non-positive
+    scale) raises CheckpointMismatchError naming the offending npz key --
+    bad scales silently accepted would serve garbage numerics.
+    """
+    from repro.core.quant import LayerScales, StackScales
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest.get("scales")
+    if meta is None:
+        return None
+
+    def _get(z, key, scalar: bool) -> np.ndarray:
+        if key not in z.files:
+            raise CheckpointMismatchError(
+                f"scales in {d} are malformed: missing key {key}")
+        a = np.asarray(z[key], np.float32)
+        if scalar and a.ndim != 0:
+            raise CheckpointMismatchError(
+                f"scales in {d} are malformed: {key} should be a scalar, "
+                f"has shape {tuple(a.shape)}")
+        if not scalar and a.ndim != 1:
+            raise CheckpointMismatchError(
+                f"scales in {d} are malformed: {key} should be 1-D, "
+                f"has shape {tuple(a.shape)}")
+        if not np.all(a > 0):
+            raise CheckpointMismatchError(
+                f"scales in {d} are malformed: {key} contains "
+                "non-positive entries")
+        return a
+
+    out = []
+    with np.load(os.path.join(d, _SCALE_FILE)) as z:
+        for i, kind in enumerate(meta["kinds"]):
+            x = float(_get(z, f"x_{i}", scalar=True))
+            if kind == "mlp":
+                out.append(LayerScales(
+                    kind="mlp", x=x, w=_get(z, f"w_{i}", scalar=False)))
+            else:
+                out.append(LayerScales(
+                    kind="kan", x=x,
+                    w_b=float(_get(z, f"wb_{i}", scalar=True)),
+                    t=_get(z, f"t_{i}", scalar=False)))
+    return StackScales(tuple(out))
 
 
 class AsyncCheckpointer:

@@ -151,3 +151,27 @@ def masked_pattern_rates(masks: Sequence[Optional[PatternMask]]
                          ) -> List[float]:
     """Per-layer measured sparsity rates (cycle-model inputs)."""
     return [0.0 if m is None else float(m.sparsity) for m in masks]
+
+
+def calibrate_scales(params, model, calib_x: np.ndarray, *,
+                     impl: str = "jnp"):
+    """Derive per-layer symmetric int8 scales from the calibration batch.
+
+    Companion to ``calibrate_stack``: the SAME calibration batch that
+    yields the two-stage masks also yields the quantization scales
+    (per-output-channel for MLP ``w``, per-basis for KAN ``t`` plus a
+    scalar for ``w_b``, and one static input-activation scalar per layer
+    from the dense forward's activation trace).  Host-side numpy over a
+    fixed batch, so a fixed seed gives bit-identical scales -- the same
+    determinism contract the masks carry.
+    """
+    from repro.core.quant import StackScales, derive_layer_scales
+    from repro.models.ffn import stack_layer_cfgs
+
+    dense_model = dataclasses.replace(model, pattern_rate=0.0)
+    acts = stack_activations(params, dense_model, calib_x, impl=impl)
+    scales = tuple(
+        derive_layer_scales(kind, p, acts[i])
+        for i, (p, (kind, _)) in enumerate(
+            zip(params, stack_layer_cfgs(dense_model))))
+    return StackScales(scales)

@@ -38,6 +38,24 @@ from typing import List, Optional, Sequence
 from repro.core.modes import RECONFIG_CYCLES, LayerKind, ModePlan
 from repro.core.splines import SplineSpec, spu_op_count
 
+# Bytes per element on the wire, by served precision.  The DMA/byte model
+# derives every transfer size from these instead of hard-coding "FP16":
+# the serving engine actually runs f32 (or bf16/int8 when quantized), and
+# the bytes-halved/quartered DMA stream is precisely the win the paper's
+# fixed-point datapath claims -- so it must be charged from the dtype
+# served, not from the prototype's native width.
+PRECISION_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "int8": 1}
+
+
+def precision_bytes(precision: str) -> int:
+    try:
+        return PRECISION_BYTES[precision]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of "
+            f"{sorted(PRECISION_BYTES)}") from None
+
+
 # ---------------------------------------------------------------------------
 # Hardware description (paper Sec. III / Table II) + calibration constants.
 # ---------------------------------------------------------------------------
@@ -118,6 +136,21 @@ class LayerWork:
         dens = self.in_nnz_rate if zero_free else 1.0
         keep = self.keep_frac if pattern else 1.0
         return self.n_in * self.n_out * dens * keep
+
+    def streamed_params(self) -> float:
+        """Parameter ELEMENTS DMA-streamed to serve one batch of this layer.
+
+        Static stage-2 masks compact the weight stream offline, so only
+        kept entries cross the port: a KAN layer streams its fused
+        [w_b ; t] table with the kept basis columns (the silu row is
+        never maskable), an MLP layer streams the kept weight rows plus
+        the bias.  Multiply by the served precision's byte width
+        (``precision_bytes``) for bytes -- done by ``serving_report``.
+        """
+        if self.kind is LayerKind.KAN:
+            kept_bases = self.spec.n_bases * self.keep_frac
+            return self.n_in * self.n_out * (kept_bases + 1.0)
+        return self.n_in * self.keep_frac * self.n_out + self.n_out
 
 
 # ---------------------------------------------------------------------------
@@ -290,11 +323,17 @@ class VikinArray:
     n_chips: int = 1
     host_bytes_per_cycle: float = 64.0   # shared host<->array port width
     dma_setup_cycles: float = 96.0       # per chip, per direction
-    bytes_per_feat: int = 2              # FP16 activations on the wire
+    precision: str = "f32"               # dtype of activations on the wire
+    # Derived from ``precision`` when None (was a hard-coded FP16 "2" while
+    # serving actually ran f32); an explicit int still overrides.
+    bytes_per_feat: Optional[int] = None
 
     def __post_init__(self):
         if self.n_chips < 1:
             raise ValueError(f"n_chips must be >= 1, got {self.n_chips}")
+        if self.bytes_per_feat is None:
+            object.__setattr__(self, "bytes_per_feat",
+                               precision_bytes(self.precision))
 
     def rows_per_chip(self, batch: int) -> int:
         return math.ceil(max(batch, 1) / self.n_chips)
@@ -313,6 +352,7 @@ def serving_report(
     batch: int = 1,
     array: Optional[VikinArray] = None,
     prev_mode=None,
+    precision: str = "f32",
 ) -> dict:
     """One served batch's simulated-hardware accounting (runtime backends).
 
@@ -338,13 +378,25 @@ def serving_report(
     breakdown.  Mode-switch TOTALS stay per-row-stream attribution (every
     row pays its plan; flip totals are chip-count independent, test-pinned)
     while the wall clock charges each chip its own row stream's flips.
+
+    ``precision`` is the dtype SERVED (what the runtime actually streams:
+    "f32" for the plain path, "int8" for the quantized one); it sets the
+    byte width of every DMA transfer in ``dma_bytes`` -- activations in
+    and out (per row) plus the compacted parameter stream (once per
+    batch, the weight buffers are reloaded per served batch).  It does
+    not change cycle counts: the lanes are width-agnostic in this model,
+    the bytes are the precision win.
     """
     plan = ModePlan.for_layers([w.kind for w in layers])
     batch = max(batch, 1)
     switches, exit_mode = plan.stream_switches(batch, prev_mode)
+    ebytes = precision_bytes(precision)
+    dma_bytes = (batch * (layers[0].n_in + layers[-1].n_out) * ebytes
+                 + sum(w.streamed_params() for w in layers) * ebytes)
     out = {
         "mode_switches": float(switches),
         "reconfig_cycles": float(switches * RECONFIG_CYCLES),
+        "dma_bytes": float(dma_bytes),
     }
     if exit_mode is not None:
         out["exit_mode"] = exit_mode
@@ -361,6 +413,11 @@ def serving_report(
             "serving_report: array.hw disagrees with the hw argument; "
             "build the VikinArray with the chip model you are reporting "
             "against (the array's hw is what the chips run)")
+    if array.precision != precision:
+        raise ValueError(
+            f"serving_report: array precision {array.precision!r} disagrees "
+            f"with the served precision {precision!r}; build the VikinArray "
+            "with the dtype actually on the wire")
     rows = array.rows_per_chip(batch)
     chip = run_model(layers, array.hw, batch=rows)
     # wall clock: the slowest chip replays ``rows`` back-to-back instances,
@@ -403,7 +460,13 @@ class EdgeGPU:
     launch_s: float = 3.3e-6           # per-kernel dispatch overhead
     util: float = 0.02                 # tensor-path utilization, tiny GEMMs
     power_w: float = 4.0               # dynamic power at this duty cycle
-    bytes_per_param: int = 2           # FP16
+    precision: str = "f16"             # Table II runs the GPU at FP16
+    bytes_per_param: Optional[int] = None   # derived from precision
+
+    def __post_init__(self):
+        if self.bytes_per_param is None:
+            object.__setattr__(self, "bytes_per_param",
+                               precision_bytes(self.precision))
 
     def latency_s(self, layers: Sequence[LayerWork]) -> float:
         t = 0.0

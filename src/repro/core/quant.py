@@ -1,0 +1,242 @@
+"""Post-training symmetric int8 quantization for VIKIN stacks (DESIGN.md
+Sec. 16).
+
+The paper's edge comparison is a precision-and-bytes story: the FPGA
+datapath runs fixed-point, and the DMA stream (weights + activations) is
+what the 16-lane arrays actually wait on.  This module provides the
+numerics half of that story -- calibration-time scale derivation, the
+quantize/dequantize helpers every execution path shares, and the int8
+stack forward -- while ``core/engine`` charges the byte half.
+
+Contract (the f32-accumulate contract, test-pinned):
+
+  * **Scales** are symmetric per-tensor-slice maxima over the calibration
+    data: ``scale = max|x| / 127``, zero-point free.  MLP weights quantize
+    per OUTPUT channel (one scale per column of ``w``), KAN spline tables
+    per BASIS index (one scale per ``t[:, i, :]`` slab, so the fused
+    ``[w_b ; t]`` rows of one input feature carry an (nbk+1)-vector of
+    slot scales), and activations per LAYER (one static scalar from the
+    same calibration batch that produced the two-stage masks).
+  * **Quantize**: ``clip(round(x / scale), -127, 127) -> int8`` --
+    round-half-away-from-zero is NOT used; jnp.round (banker's rounding)
+    is, identically on every path, so quantized weights are bit-identical
+    wherever they are produced.
+  * **Compute**: int8 operands are dequantized ON LOAD into fp32 and
+    accumulated in fp32 (the MXU-friendly layout: the pattern-matmul path
+    contracts raw int8-valued f32 integers and applies ``s_x * s_w`` once
+    in the epilogue AFTER full accumulation, which keeps tiled Pallas and
+    single-dot jnp bitwise identical -- products are <= 127^2 and K <=
+    a few hundred, so every partial sum is an exactly-representable f32
+    integer regardless of accumulation order).
+  * **Requantize**: each non-final layer's f32 output is quantized to the
+    NEXT layer's input scale (activations travel int8 between layers);
+    the final layer emits f32.
+
+Masks compose freely: per-output-channel / per-basis scales are indexed by
+the dimension the stage-2 masks do NOT touch, so the same StackScales
+serves the dense and every sparsified deployment of a checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Q_MAX = 127.0            # symmetric int8 range: [-127, 127] (no -128)
+_EPS = 1e-8              # all-zero slices get a harmless positive scale
+
+
+# ---------------------------------------------------------------------------
+# The shared quantize/dequantize helpers (jnp: used inside jitted forwards).
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: jax.Array, scale) -> jax.Array:
+    """f32 -> int8 under a symmetric scale (scalar or broadcastable)."""
+    s = jnp.asarray(scale, jnp.float32)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -Q_MAX, Q_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale) -> jax.Array:
+    """int8 -> f32 under the same symmetric scale."""
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+
+def symmetric_scale(x: np.ndarray, axis=None) -> np.ndarray:
+    """Calibration-time scale: ``max|x| / 127`` over ``axis`` (host-side)."""
+    m = np.max(np.abs(np.asarray(x, np.float32)), axis=axis)
+    return np.maximum(m, _EPS) / Q_MAX
+
+
+# ---------------------------------------------------------------------------
+# Per-layer / per-stack scale containers (checkpoint/checkpoint.py carries
+# these next to the masks; core/calibrate derives them).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerScales:
+    """One layer's symmetric scales.
+
+    ``x`` is the layer's INPUT activation scale (static scalar from the
+    calibration batch).  MLP layers carry ``w`` (per-output-channel,
+    shape (n_out,)); KAN layers carry ``w_b`` (scalar, the silu branch)
+    and ``t`` (per-basis, shape (n_bases,)).
+    """
+
+    kind: str                              # "kan" | "mlp"
+    x: float
+    w: Optional[np.ndarray] = None         # mlp: (n_out,)
+    w_b: Optional[float] = None            # kan: scalar
+    t: Optional[np.ndarray] = None         # kan: (n_bases,)
+
+    def __post_init__(self):
+        if self.kind == "mlp":
+            if self.w is None or self.w_b is not None or self.t is not None:
+                raise ValueError("mlp LayerScales needs w and only w")
+        elif self.kind == "kan":
+            if self.w_b is None or self.t is None or self.w is not None:
+                raise ValueError("kan LayerScales needs w_b and t")
+        else:
+            raise ValueError(f"unknown layer kind {self.kind!r}")
+
+    def slot_scales(self, kb: Sequence[int]) -> np.ndarray:
+        """(nbk+1,) scale vector of one fused-[w_b ; t] feature slot: the
+        silu row's scale followed by the kept bases' scales, matching
+        ``kernels.kan_fused.ops.fuse_wt``'s row interleave."""
+        if self.kind != "kan":
+            raise ValueError("slot_scales is KAN-only")
+        return np.concatenate(
+            [[np.float32(self.w_b)],
+             np.asarray(self.t, np.float32)[list(kb)]]).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackScales:
+    """Calibrated per-layer scales for one KAN/MLP stack (one LayerScales
+    per layer, same layer order as StackSparsity.masks)."""
+
+    scales: Tuple[LayerScales, ...]
+
+    def __len__(self) -> int:
+        return len(self.scales)
+
+    def __getitem__(self, i: int) -> LayerScales:
+        return self.scales[i]
+
+    def summary(self) -> dict:
+        return {
+            "n_layers": len(self.scales),
+            "kinds": [s.kind for s in self.scales],
+            "x": [round(float(s.x), 6) for s in self.scales],
+        }
+
+
+def derive_layer_scales(kind: str, p, act: np.ndarray) -> LayerScales:
+    """One layer's scales from its params + calibration input activations."""
+    x = float(symmetric_scale(act))
+    if kind == "mlp":
+        w = np.asarray(jax.device_get(p["w"]), np.float32)
+        return LayerScales(kind="mlp", x=x, w=symmetric_scale(w, axis=0))
+    t = np.asarray(jax.device_get(p["t"]), np.float32)
+    w_b = np.asarray(jax.device_get(p["w_b"]), np.float32)
+    return LayerScales(
+        kind="kan", x=x, w_b=float(symmetric_scale(w_b)),
+        t=symmetric_scale(t, axis=(0, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (build time, once per served model).
+# ---------------------------------------------------------------------------
+
+
+def quantize_stack_params(params: list, model, scales: StackScales) -> list:
+    """f32 stack params -> int8 params (+ f32 bias) under ``scales``.
+
+    KAN layers keep the FULL (n_in, n_bases, n_out) table quantized
+    per-basis; stage-2 compaction (flatten_t/fuse_wt on the int8 arrays)
+    happens at apply time from the static mask, so one quantized
+    checkpoint serves every mask configuration.
+    """
+    from repro.models.ffn import stack_layer_cfgs
+
+    cfgs = stack_layer_cfgs(model)
+    if len(scales) != len(cfgs):
+        raise ValueError(
+            f"scales cover {len(scales)} layers, model has {len(cfgs)}")
+    out = []
+    for p, (kind, _), ls in zip(params, cfgs, scales.scales):
+        if ls.kind != kind:
+            raise ValueError(f"scales kind {ls.kind!r} != layer {kind!r}")
+        if kind == "mlp":
+            out.append({
+                "w_q": quantize(p["w"], jnp.asarray(ls.w)[None, :]),
+                "b": p["b"].astype(jnp.float32),
+            })
+        else:
+            out.append({
+                "w_b_q": quantize(p["w_b"], ls.w_b),
+                "t_q": quantize(p["t"], jnp.asarray(ls.t)[None, :, None]),
+            })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The int8 stack forward (mirror of models/ffn.vikin_stack_apply).
+# ---------------------------------------------------------------------------
+
+
+def quant_stack_apply(qparams: list, x: jax.Array, model,
+                      scales: StackScales, *, impl: str = "auto",
+                      masks=None) -> jax.Array:
+    """Run the int8-quantized stack; returns f32 outputs.
+
+    Mirrors ``vikin_stack_apply`` layer by layer: activations enter each
+    layer int8 (requantized to that layer's calibrated input scale), both
+    kernels dequantize-on-load and accumulate f32, and the final layer's
+    f32 accumulator is emitted un-requantized.  ``impl`` threads the
+    kernel dispatch exactly like the f32 path; ``masks`` are the same
+    calibrated two-stage masks.
+    """
+    from repro.kernels.kan_fused.ops import (
+        flatten_t, fuse_wt, kan_linear_q8)
+    from repro.kernels.pattern_matmul.ops import pattern_linear_q8
+    from repro.models.ffn import stack_layer_cfgs
+
+    cfgs = stack_layer_cfgs(model, masks)
+    n_layers = len(cfgs)
+    h_q = quantize(x, scales[0].x)
+    y = None
+    for i, (qp, (kind, cfg), ls) in enumerate(
+            zip(qparams, cfgs, scales.scales)):
+        if kind == "kan":
+            kb = cfg.kb if cfg.kb is not None else tuple(
+                range(cfg.spec.n_bases))
+            wt_q = fuse_wt(qp["w_b_q"], flatten_t(qp["t_q"], kb), len(kb))
+            y = kan_linear_q8(
+                h_q, wt_q, tuple(float(s) for s in ls.slot_scales(kb)),
+                cfg.spec, kb, x_scale=float(ls.x), impl=impl,
+                blocks=cfg.blocks)
+        else:
+            col_scale = float(ls.x) * jnp.asarray(ls.w, jnp.float32)
+            y = pattern_linear_q8(
+                h_q, qp["w_q"], col_scale, cfg["mask"], qp["b"],
+                act=cfg["act"], impl=impl)
+        if i + 1 < n_layers:
+            h_q = quantize(y, scales[i + 1].x)
+    return y
+
+
+def quant_error_bound(ls: LayerScales, kb=None) -> float:
+    """Loose per-output worst-case dequantization step of one layer's
+    weights (tests use it to bound quantize->dequantize parity): half a
+    quantization step per weight element on the widest-scale slot."""
+    if ls.kind == "mlp":
+        return float(0.5 * np.max(ls.w))
+    ss = ls.slot_scales(
+        kb if kb is not None else range(len(np.asarray(ls.t))))
+    return float(0.5 * np.max(ss))

@@ -161,10 +161,16 @@ def get_cache() -> AutotuneCache:
 
 def lookup_blocks(kernel: str, dims: Sequence[int], dtype,
                   cache: Optional[AutotuneCache] = None,
+                  backend: Optional[str] = None,
                   ) -> Optional[Dict[str, int]]:
-    """Cached blocks for a shape, or None.  Logs the hit for observability."""
+    """Cached blocks for a shape, or None.  Logs the hit for observability.
+
+    ``backend`` namespaces the key exactly like ``search``/``tune_*`` do
+    when storing (interpret-mode tuning stores under "cpu"); None means
+    the current jax backend, so lookups match what was tuned HERE.
+    """
     cache = cache or get_cache()
-    key = cache_key(kernel, dims, dtype)
+    key = cache_key(kernel, dims, dtype, backend)
     blocks = cache.lookup(key)
     if blocks is not None:
         note_dispatch(kernel, key, blocks, "cache")

@@ -176,6 +176,46 @@ def _kan_kernel_v2(
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kan_kernel_v2_q8(
+    x_ref, kb_ref, wt_ref, ss_ref, o_ref, acc_ref,
+    *, spec: SplineSpec, nbk: int, i_steps: int, x_scale: float,
+):
+    """v2 int8 variant: dequantize-on-load, f32 SPU/accumulate, f32 out.
+
+    The activation tile is real-valued (silu + spline bases of the
+    dequantized input), so unlike the pattern-matmul q8 kernel the MXU
+    contraction here cannot stay in integer codes -- both operands widen
+    on load.  ``x_scale`` is the layer's static input scale; ``ss_ref``
+    is the (1, nbk+1) per-slot weight scale vector matching fuse_wt's
+    row interleave ([w_b ; t[kb]] per input feature).
+    """
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32) * x_scale          # dequant on load
+    s, vals, cell_i = _spu_tile(x, spec)
+    act = _tse_scatter(vals, cell_i, kb_ref[...], nbk)    # (bm, bi, nbk)
+
+    bm, bi = x.shape
+    # Dequantize the fused weight tile per row slot: rows of one input
+    # feature are [w_b ; t[kb0] ; ...], each with its own symmetric scale.
+    wt = wt_ref[...].astype(jnp.float32).reshape(bi, nbk + 1, -1)
+    wt = (wt * ss_ref[...].reshape(1, nbk + 1, 1)).reshape(
+        bi * (nbk + 1), -1)
+    fused = jnp.concatenate([s[..., None], act], axis=-1)  # (bm, bi, nbk+1)
+    acc_ref[...] += jnp.dot(
+        fused.reshape(bm, bi * (nbk + 1)), wt,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == i_steps - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 def _clamp_blocks(B, n_in, n_out, bm, bi, bn):
     return min(bm, max(8, B)), min(bi, n_in), min(bn, n_out)
 
@@ -287,4 +327,65 @@ def kan_fused_pallas_v2(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(xp, kb_arr, wtp)
+    return out[:B, :n_out]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "kb", "x_scale", "bm", "bi", "bn", "interpret",
+                     "out_dtype"),
+)
+def kan_fused_pallas_v2_q8(
+    x_q: jax.Array,          # (B, n_in) int8
+    wt_q: jax.Array,         # (n_in * (nbk+1), n_out) int8, fused rows
+    slot_scales: jax.Array,  # (1, nbk+1) f32: [s_wb, s_t[kb0], ...]
+    spec: SplineSpec,
+    kb: Optional[Tuple[int, ...]] = None,
+    *,
+    x_scale: float,
+    bm: int = DEFAULT_BM,
+    bi: int = DEFAULT_BI,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """v2 int8 kernel: int8 x / fused-weight stream, f32 accumulate + out.
+
+    The int8 weight stream is what the DMA-byte saving in
+    ``core/engine.serving_report`` models; the arithmetic contract is
+    core/quant's (dequantize on load, accumulate f32, emit f32 -- the
+    caller requantizes).
+    """
+    B, n_in = x_q.shape
+    n_out = wt_q.shape[1]
+    kb = tuple(range(spec.n_bases)) if kb is None else tuple(kb)
+    nbk = len(kb)
+    assert wt_q.shape == (n_in * (nbk + 1), n_out), (wt_q.shape, n_in, nbk)
+
+    bm, bi, bn = _clamp_blocks(B, n_in, n_out, bm, bi, bn)
+    pb, pi, pn = -B % bm, -n_in % bi, -n_out % bn
+    # Int8 zero pads dequantize to 0.0; _spu_tile clips into the spline
+    # domain and the padded (zero) weight rows null the contribution.
+    xp = jnp.pad(x_q, ((0, pb), (0, pi)))
+    wtp = jnp.pad(wt_q, ((0, pi * (nbk + 1)), (0, pn)))
+    kb_arr = jnp.asarray(kb, jnp.int32)[None, :]          # (1, nbk) input
+    ss = slot_scales.astype(jnp.float32).reshape(1, nbk + 1)
+    Bp, Ip, Np = B + pb, n_in + pi, n_out + pn
+    i_steps = Ip // bi
+
+    out = pl.pallas_call(
+        functools.partial(_kan_kernel_v2_q8, spec=spec, nbk=nbk,
+                          i_steps=i_steps, x_scale=float(x_scale)),
+        grid=(Bp // bm, Np // bn, i_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bi), lambda b, n, i: (b, i)),
+            pl.BlockSpec((1, nbk), lambda b, n, i: (0, 0)),
+            pl.BlockSpec((bi * (nbk + 1), bn), lambda b, n, i: (i, n)),
+            pl.BlockSpec((1, nbk + 1), lambda b, n, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda b, n, i: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, kb_arr, wtp, ss)
     return out[:B, :n_out]

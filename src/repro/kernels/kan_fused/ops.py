@@ -29,6 +29,7 @@ from repro.kernels.kan_fused.kan_fused import (
     DEFAULT_BN,
     kan_fused_pallas,
     kan_fused_pallas_v2,
+    kan_fused_pallas_v2_q8,
 )
 
 DEFAULT_VERSION = 2
@@ -68,13 +69,20 @@ def resolve_blocks(
     B: int, n_in: int, n_out: int, nbk: int, dtype,
     blocks: Optional[Tuple[int, int, int]] = None,
     version: int = DEFAULT_VERSION,
+    backend: Optional[str] = None,
 ) -> Dict[str, int]:
-    """(bm, bi, bn) for the fused kernel: explicit > cached > defaults."""
+    """(bm, bi, bn) for the fused kernel: explicit > cached > defaults.
+
+    ``backend`` selects the cache namespace: interpret-mode callers pass
+    "cpu" so entries stored by ``tune_kan_fused(interpret=True)`` are
+    reachable; None means the current jax backend.
+    """
     if blocks is not None:
         bm, bi, bn = blocks
         return {"bm": bm, "bi": bi, "bn": bn}
     hit = autotune.lookup_blocks(
-        f"kan_fused_v{version}", (B, n_in, n_out, nbk), dtype)
+        f"kan_fused_v{version}", (B, n_in, n_out, nbk), dtype,
+        backend=backend)
     if hit is not None:
         return hit
     return {"bm": DEFAULT_BM, "bi": DEFAULT_BI, "bn": DEFAULT_BN}
@@ -152,9 +160,10 @@ def kan_linear(
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "jnp"
     if impl in ("pallas", "pallas_interpret"):
-        bk = resolve_blocks(xf.shape[0], n_in, w_b.shape[1], nbk, x.dtype,
-                            blocks, version)
         interpret = impl == "pallas_interpret"
+        bk = resolve_blocks(xf.shape[0], n_in, w_b.shape[1], nbk, x.dtype,
+                            blocks, version,
+                            backend="cpu" if interpret else None)
         if version >= 2:
             wt = fuse_wt(w_b, t_flat, nbk)
             y = kan_fused_pallas_v2(xf, wt, spec, kb, interpret=interpret,
@@ -168,3 +177,98 @@ def kan_linear(
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return y.reshape(*lead, w_b.shape[-1])
+
+
+def _dequant_wt(wt_q: jax.Array, slot_scales: Tuple[float, ...],
+                nbk: int) -> jax.Array:
+    """(n_in*(nbk+1), n_out) int8 fused weights -> f32 under per-slot scales.
+
+    Shared by the jnp oracle below; the Pallas q8 kernel performs the
+    identical per-row-slot multiply on each loaded tile, so both paths
+    see bit-identical dequantized weights.
+    """
+    n_rows, n_out = wt_q.shape
+    ss = jnp.asarray(slot_scales, jnp.float32).reshape(1, nbk + 1, 1)
+    wt = wt_q.astype(jnp.float32).reshape(n_rows // (nbk + 1), nbk + 1, n_out)
+    return (wt * ss).reshape(n_rows, n_out)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slot_scales", "spec", "kb", "x_scale", "out_dtype"))
+def _kan_linear_q8_jnp(
+    x_q: jax.Array, wt_q: jax.Array, slot_scales: Tuple[float, ...],
+    spec: SplineSpec, kb: Tuple[int, ...], x_scale: float,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    from repro.core.quant import dequantize
+
+    n_in = x_q.shape[-1]
+    nbk = len(kb)
+    x = dequantize(x_q, x_scale)                           # f32
+    vals, cell = bases_local(spec.clip(x), spec)
+    kbv = jnp.asarray(kb, jnp.int32)
+    act = scatter_kept(vals, cell, kbv, spec.n_active)     # (B, n_in, nbk)
+    s = silu(x)                                            # already f32
+    wt = _dequant_wt(wt_q, slot_scales, nbk)
+    fused = jnp.concatenate([s[..., None], act], axis=-1)
+    y = jnp.dot(
+        fused.reshape(-1, n_in * (nbk + 1)), wt,
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slot_scales", "spec", "kb", "x_scale", "impl",
+                     "blocks", "out_dtype"),
+)
+def kan_linear_q8(
+    x_q: jax.Array,          # (..., n_in) int8
+    wt_q: jax.Array,         # (n_in * (nbk+1), n_out) int8, fused (fuse_wt)
+    slot_scales: Tuple[float, ...],   # (nbk+1,) [s_wb, s_t[kb0], ...]
+    spec: SplineSpec,
+    kb: Optional[Tuple[int, ...]] = None,
+    *,
+    x_scale: float,
+    impl: str = "auto",
+    blocks: Optional[Tuple[int, int, int]] = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Int8 phi(x): dequantize-on-load, f32 accumulate, f32 out.
+
+    Activations and fused weights stream int8 (the DMA saving the engine
+    charges); the spline/silu math runs on the DEQUANTIZED f32 input, so
+    the Pallas kernel and this module's jnp oracle agree to the same
+    ~1e-4 tile-accumulation tolerance as the f32 kernels (the activation
+    tile is real-valued -- no integer-exact bitwise contract here, unlike
+    pattern_linear_q8).  Scales are static: one trace per calibration.
+    """
+    lead = x_q.shape[:-1]
+    n_in = x_q.shape[-1]
+    xf = x_q.reshape(-1, n_in)
+    kb = tuple(range(spec.n_bases)) if kb is None else tuple(kb)
+    nbk = len(kb)
+    slot_scales = tuple(float(s) for s in slot_scales)
+    if len(slot_scales) != nbk + 1:
+        raise ValueError(
+            f"slot_scales has {len(slot_scales)} entries for nbk={nbk}")
+
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl in ("pallas", "pallas_interpret"):
+        interpret = impl == "pallas_interpret"
+        bk = resolve_blocks(xf.shape[0], n_in, wt_q.shape[1], nbk, x_q.dtype,
+                            blocks, 2, backend="cpu" if interpret else None)
+        ss = jnp.asarray(slot_scales, jnp.float32)[None, :]
+        y = kan_fused_pallas_v2_q8(xf, wt_q, ss, spec, kb,
+                                   x_scale=float(x_scale),
+                                   interpret=interpret,
+                                   out_dtype=out_dtype, **bk)
+    elif impl == "jnp":
+        y = _kan_linear_q8_jnp(xf, wt_q, slot_scales, spec, kb,
+                               float(x_scale), out_dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, wt_q.shape[-1])

@@ -46,6 +46,72 @@ def _mm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int, act):
         o_ref[...] = ACTS[act](y).astype(o_ref.dtype)
 
 
+def _mm_kernel_q8(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    # Int8 variant: operands arrive as raw int8 codes and are widened to
+    # f32 ON LOAD; the accumulator then holds exact integers (|x*w| <=
+    # 127^2, K small enough that partial sums stay < 2^24), so tiled
+    # accumulation is bitwise identical to a single dot regardless of
+    # k-step order.  The kernel emits the RAW integer accumulator: the
+    # symmetric scale s_x * s_w[col], bias, and activation are applied by
+    # the shared wrapper epilogue (ops.pattern_linear_q8) -- fusing them
+    # here would FMA `acc * s + b` into one rounding while the eager jnp
+    # oracle rounds twice, breaking the bitwise jnp==pallas contract.
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "interpret"),
+)
+def matmul_q8_pallas(
+    x_q: jax.Array,          # (M, Kc) int8 pre-compacted activations
+    w_q: jax.Array,          # (Kc, N) int8 pre-compacted weights
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """Exact-integer int8 matmul: f32 out holding sum(x_q * w_q) per cell."""
+    M, Kc = x_q.shape
+    Kc2, N = w_q.shape
+    assert Kc == Kc2, (Kc, Kc2)
+
+    # Int8 zero pads are matmul-neutral just like f32 zeros.
+    pm, pk, pn = -M % bm, -Kc % bk, -N % bn
+    xp = jnp.pad(x_q, ((0, pm), (0, pk)))
+    wp = jnp.pad(w_q, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, Kc + pk, N + pn
+    k_steps = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel_q8, k_steps=k_steps),
+        grid=(Mp // bm, Np // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:M, :N]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("act", "bm", "bk", "bn", "interpret", "out_dtype"),

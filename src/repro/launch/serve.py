@@ -67,16 +67,22 @@ def _make_vikin_backend(args, model):
 
     params = vikin_stack_init(jax.random.key(0), model)
     masks = None
+    scales = None
     # accept --ckpt-dir too: train.py writes through that flag, and serving
     # random-init weights because the "wrong" spelling was used would be a
     # silently wrong benchmark
     ckpt = args.ckpt or args.ckpt_dir
     if ckpt:
-        from repro.checkpoint import restore_checkpoint, restore_masks
+        from repro.checkpoint import (
+            restore_checkpoint,
+            restore_masks,
+            restore_scales,
+        )
         # trained + sparsified checkpoint (launch/train.py --arch vikin-*):
         # params restored into the init tree's structure, masks bit-exact
         params, step, extra = restore_checkpoint(ckpt, params)
         masks = restore_masks(ckpt)
+        scales = restore_scales(ckpt)
         print(f"restored {model.name} from {ckpt} step {step}")
         if extra:
             print(f"  trained on task={extra.get('task')} "
@@ -87,16 +93,37 @@ def _make_vikin_backend(args, model):
             kept = [None if m is None else f"{m.n_keep}/{m.n}"
                     for m in masks]
             print(f"  restored per-layer masks (kept): {kept}")
+        if args.precision == "int8" and scales is None:
+            raise SystemExit(
+                f"--precision int8 needs calibrated scales, but {ckpt} has "
+                f"no scales.npz; re-export it with launch/train.py (scales "
+                f"are always emitted alongside the masks)")
+    elif args.precision == "int8":
+        # no checkpoint: calibrate scales for the random-init stack from a
+        # synthetic batch matching the features _serve_vikin submits
+        import numpy as np
+        from repro.core.calibrate import calibrate_scales
+        rng = np.random.default_rng(0)
+        calib_x = rng.random((256, model.sizes[0])).astype(np.float32)
+        scales = calibrate_scales(params, model, calib_x, impl="jnp")
+        print(f"no checkpoint: calibrated int8 scales from a synthetic "
+              f"batch (x={scales.summary()['x']})")
     if args.devices > 1:
         from repro.runtime.sharded import ShardedVikinBackend
         backend = ShardedVikinBackend(model, params, impl=args.impl,
-                                      masks=masks, devices=args.devices)
+                                      masks=masks, devices=args.devices,
+                                      precision=args.precision,
+                                      scales=scales)
         print(f"sharded serving: {args.devices} devices "
               f"({backend.mesh.devices.ravel()[0].platform}), "
               f"per-shard bucket >= {backend.shard_bucket(args.slots)} "
               f"at full occupancy")
     else:
-        backend = VikinBackend(model, params, impl=args.impl, masks=masks)
+        backend = VikinBackend(model, params, impl=args.impl, masks=masks,
+                               precision=args.precision, scales=scales)
+    if args.precision != "f32":
+        print(f"serving precision: {args.precision} "
+              f"(f32 accumulation, dtype-aware DMA model)")
     plan = backend.plan.summary()
     print(f"arch {model.name}: layers={list(model.layer_kinds)} "
           f"sizes={list(model.sizes)} pattern_rate={model.pattern_rate}")
@@ -277,6 +304,11 @@ def main():
     ap.add_argument("--impl", default="auto",
                     choices=["auto", "jnp", "pallas", "pallas_interpret"],
                     help="kernel dispatch for vikin-* archs")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="vikin archs: served precision (DESIGN.md Sec. "
+                         "16); int8 needs the checkpoint's calibrated "
+                         "scales and dequantizes into f32 accumulation")
     ap.add_argument("--devices", type=int, default=1,
                     help="vikin archs: data-parallel serving over N devices "
                          "(runtime/sharded; outputs bitwise identical to "
@@ -331,6 +363,10 @@ def main():
             raise SystemExit(
                 "--max-queue/--admission are vikin-only here; the "
                 "transformer Server keeps the unbounded back-compat path")
+        if args.precision != "f32":
+            raise SystemExit(
+                f"--precision is vikin-only (core/quant int8 path); "
+                f"{args.arch!r} would silently serve f32 anyway")
         _serve_transformer(args, resolved[0][1])
 
 

@@ -29,6 +29,7 @@ def _train_vikin(args, model):
     """Train -> calibrate -> sparsified checkpoint for a VIKIN stack."""
     from repro.checkpoint import save_checkpoint
     from repro.core.calibrate import (
+        calibrate_scales,
         calibrate_stack,
         keep_per_group_for_rate,
         masked_pattern_rates,
@@ -56,6 +57,9 @@ def _train_vikin(args, model):
     calib_x = data["train_x"][:args.calib_samples]
     sp = calibrate_stack(out["params"], model, calib_x,
                          keep_per_group=kpg, impl=args.impl)
+    # quantization scales from the SAME calibration batch: always emitted,
+    # so any checkpoint can later be served at --precision int8
+    scales = calibrate_scales(out["params"], model, calib_x, impl=args.impl)
     # run() already evaluated the final dense params; only sparse is new
     dense_eval = {k: v for k, v in out.items() if k.startswith("val_")}
     sparse_eval = trainer.evaluate(masks=sp.masks)
@@ -71,21 +75,35 @@ def _train_vikin(args, model):
         "val_dense": dense_eval, "val_sparse": sparse_eval,
         "sim_cycles_dense": dense_rep.cycles,
         "sim_cycles_sparse": sparse_rep.cycles,
+        "precision": args.precision,
+        "scale_x": scales.summary()["x"],
     }
     masks = (sp.masks if any(m is not None for m in sp.masks) else None)
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(
         prefix=f"vikin_{model.name}_")
     path = save_checkpoint(ckpt_dir, args.steps, out["params"],
-                           extra=extra, masks=masks)
+                           extra=extra, masks=masks, scales=scales)
     speedup = dense_rep.cycles / max(sparse_rep.cycles, 1.0)
     print(f"calibrated masks at rate {rate}: keep_rates="
           f"{sp.summary()['keep_rates']}")
+    if args.precision == "int8":
+        from repro.core.quant import quant_stack_apply, quantize_stack_params
+        import jax.numpy as jnp
+        import numpy as np
+        qp = quantize_stack_params(out["params"], model, scales)
+        yq = np.asarray(quant_stack_apply(
+            qp, jnp.asarray(data["val_x"]), model, scales,
+            impl=args.impl, masks=list(sp.masks)))
+        mse_q = float(np.mean((yq - np.asarray(data["val_y"])) ** 2))
+        print(f"val int8-sparse mse {mse_q:.6f} "
+              f"(scales x={extra['scale_x']})")
     print(f"val dense {dense_eval} -> sparse {sparse_eval}")
     print(f"simulated cycles dense {dense_rep.cycles:.0f} -> sparse "
           f"{sparse_rep.cycles:.0f} ({speedup:.2f}x)")
-    print(f"sparsified checkpoint: {path}")
+    print(f"sparsified checkpoint: {path} (masks + int8 scales)")
     print(f"serve it:  PYTHONPATH=src python -m repro.launch.serve "
-          f"--arch {model.name} --ckpt {ckpt_dir}")
+          f"--arch {model.name} --ckpt {ckpt_dir}"
+          + (" --precision int8" if args.precision == "int8" else ""))
 
 
 def main():
@@ -111,6 +129,11 @@ def main():
                     help="kernel dispatch for vikin-* training")
     ap.add_argument("--calib-samples", type=int, default=256,
                     help="calibration batch size for mask derivation")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="vikin: target serving precision; int8 scales are "
+                         "always calibrated + checkpointed, int8 here also "
+                         "prints the quantized val accuracy")
     ap.add_argument("--dry-run", action="store_true")
     args = ap.parse_args()
 

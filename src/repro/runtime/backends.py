@@ -233,16 +233,40 @@ class VikinBackend(ModelBackend):
     size.  ``plan`` is the workload's host-issued mode-switch schedule; the
     per-batch simulated cycles (batch_report) include its reconfiguration
     charge via core/engine.run_model.
+
+    ``precision`` selects the served numerics: "f32" (default), "bf16"
+    (params + activations cast, f32 out), or "int8" (post-training
+    quantized path, core/quant) -- int8 requires the calibrated
+    ``scales`` (core/calibrate.calibrate_scales or a checkpoint's
+    restore_scales); params are quantized ONCE here and the quantized
+    forward runs per step.  Requests still submit f32 payloads at every
+    precision; the cycle model charges precision-dependent DMA bytes.
     """
 
     def __init__(self, model, params, *, impl: str = "auto",
                  hw: Optional[VikinHW] = None, min_bucket: int = 2,
                  nnz_rates: Optional[Sequence[float]] = None,
-                 masks=None):
+                 masks=None, precision: str = "f32", scales=None):
         import jax
 
+        if precision not in ("f32", "bf16", "int8"):
+            raise ValueError(
+                f"unknown precision {precision!r}; expected f32|bf16|int8")
+        if precision == "int8":
+            if scales is None:
+                raise ValueError(
+                    "precision='int8' requires calibrated scales "
+                    "(core/calibrate.calibrate_scales or "
+                    "checkpoint.restore_scales)")
+            from repro.core.quant import quantize_stack_params
+            params = quantize_stack_params(params, model, scales)
+        elif precision == "bf16":
+            import jax.numpy as jnp
+            params = jax.tree.map(
+                lambda a: jnp.asarray(a, jnp.bfloat16), params)
         self.model, self.params = model, params
         self.impl, self.hw = impl, hw or VikinHW()
+        self.precision, self.scales = precision, scales
         self.array = None          # multi-chip model (runtime/sharded.py)
         self.min_bucket = min_bucket
         self.masks = list(masks) if masks is not None else None
@@ -269,6 +293,18 @@ class VikinBackend(ModelBackend):
         from repro.models.ffn import vikin_stack_apply
 
         model, impl, masks = self.model, self.impl, self.masks
+        if self.precision == "int8":
+            from repro.core.quant import quant_stack_apply
+
+            scales = self.scales
+            return lambda p, x: quant_stack_apply(p, x, model, scales,
+                                                  impl=impl, masks=masks)
+        if self.precision == "bf16":
+            import jax.numpy as jnp
+
+            return lambda p, x: vikin_stack_apply(
+                p, x.astype(jnp.bfloat16), model, impl=impl, masks=masks,
+            ).astype(jnp.float32)
         return lambda p, x: vikin_stack_apply(p, x, model, impl=impl,
                                               masks=masks)
 
@@ -333,7 +369,7 @@ class VikinBackend(ModelBackend):
         if key not in self._report_cache:
             self._report_cache[key] = serving_report(
                 self.layers, self.hw, batch=n_active, array=self.array,
-                prev_mode=prev_mode)
+                prev_mode=prev_mode, precision=self.precision)
         return dict(self._report_cache[key])
 
 

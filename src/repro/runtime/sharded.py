@@ -55,13 +55,15 @@ class ShardedVikinBackend(VikinBackend):
     def __init__(self, model, params, *, devices: int, impl: str = "auto",
                  hw: Optional[VikinHW] = None, min_bucket: int = 2,
                  nnz_rates: Optional[Sequence[float]] = None,
-                 masks=None, array: Optional[VikinArray] = None):
+                 masks=None, array: Optional[VikinArray] = None,
+                 precision: str = "f32", scales=None):
         super().__init__(model, params, impl=impl, hw=hw,
                          min_bucket=min_bucket, nnz_rates=nnz_rates,
-                         masks=masks)
+                         masks=masks, precision=precision, scales=scales)
         self.mesh = serving_mesh(devices)
         self.n_shards = devices
-        self.array = array or VikinArray(hw=self.hw, n_chips=devices)
+        self.array = array or VikinArray(hw=self.hw, n_chips=devices,
+                                         precision=precision)
         if self.array.n_chips != devices:
             raise ValueError(
                 f"array models {self.array.n_chips} chips but the mesh "
@@ -70,6 +72,10 @@ class ShardedVikinBackend(VikinBackend):
             raise ValueError(
                 "array.hw disagrees with the backend's hw: the array's "
                 "chip model is what the cycle report runs")
+        if self.array.precision != precision:
+            raise ValueError(
+                f"array precision {self.array.precision!r} disagrees with "
+                f"the served precision {precision!r}")
         # replicated param placement: every shard owns a full copy of the
         # (tiny, KB-scale) stack; requests shard, weights don't.
         self.params = jax.device_put(

@@ -1,6 +1,7 @@
 """int8 error-feedback gradient compression in the real train step."""
 import jax
 import numpy as np
+import pytest
 
 from repro.configs.registry import get_config
 from repro.data.lm import LMDataConfig, SyntheticLM
@@ -29,6 +30,7 @@ def _run(compress: bool, steps: int = 12):
     return losses
 
 
+@pytest.mark.slow
 def test_compressed_training_converges_close_to_exact():
     exact = _run(False)
     comp = _run(True)

@@ -133,6 +133,7 @@ SHARDED_EQ_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-moe-235b-a22b",
                                   "recurrentgemma-9b"])
 def test_sharded_equals_dense_subprocess(arch):

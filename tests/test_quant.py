@@ -1,0 +1,327 @@
+"""Int8 quantized serving path (DESIGN.md Sec. 16) + precision/persistence
+regressions.
+
+Pins the contracts the quantized pipeline relies on:
+  * quantize -> dequantize parity stays within the symmetric-scale bound
+    (0.5 * scale per element) for every layer kind;
+  * the int8 forward agrees across impls bitwise (jnp == pallas interpret,
+    the shared-epilogue construction) and tracks the f32 reference;
+  * a quantized checkpoint round-trips bit-exact -- params AND masks AND
+    scales -- and the int8 served outputs are identical pre/post restore;
+  * batched int8 serving through the engine buckets stays bitwise
+    identical to single-request serving;
+  * restore paths fail LOUDLY, naming the offending key: dtype coercion on
+    restore is opt-in (``cast=True``), malformed scale arrays raise;
+  * the cycle model charges precision-dependent DMA bytes;
+  * autotune lookups are backend-namespaced exactly like stores.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointMismatchError,
+    restore_checkpoint,
+    restore_masks,
+    restore_scales,
+    save_checkpoint,
+)
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.core.calibrate import (
+    calibrate_scales,
+    calibrate_stack,
+    keep_per_group_for_rate,
+)
+from repro.core.engine import (
+    VikinArray,
+    VikinHW,
+    precision_bytes,
+    serving_report,
+)
+from repro.core.quant import (
+    dequantize,
+    quant_stack_apply,
+    quantize,
+    quantize_stack_params,
+    symmetric_scale,
+)
+from repro.models.ffn import vikin_stack_apply, vikin_stack_init
+from repro.runtime.backends import VikinBackend
+from repro.runtime.server import Engine
+
+SMALL = dataclasses.replace(VIKIN_ARCHS["vikin-small"], pattern_rate=0.0)
+
+
+def _calibrated_small(seed=0, n_calib=64):
+    params = vikin_stack_init(jax.random.key(seed), SMALL)
+    rng = np.random.default_rng(seed)
+    calib_x = rng.random((n_calib, SMALL.sizes[0])).astype(np.float32)
+    scales = calibrate_scales(params, SMALL, calib_x)
+    return params, calib_x, scales
+
+
+# ---------------------------------------------------------------------------
+# quantize -> dequantize parity
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_dequantize_parity_bounds_per_layer_kind():
+    params, _, scales = _calibrated_small()
+    qp = quantize_stack_params(params, SMALL, scales)
+    for i, kind in enumerate(SMALL.layer_kinds):
+        ls = scales[i]
+        if kind == "mlp":
+            w = np.asarray(params[i]["w"])
+            deq = np.asarray(dequantize(qp[i]["w_q"], np.asarray(ls.w)[None, :]))
+            # round-to-nearest: each element within half a quantization step
+            bound = 0.5 * np.asarray(ls.w)[None, :] * (1 + 1e-6)
+            assert np.all(np.abs(deq - w) <= bound)
+            # bias is carried f32, untouched
+            np.testing.assert_array_equal(np.asarray(qp[i]["b"]),
+                                          np.asarray(params[i]["b"]))
+        else:
+            w_b = np.asarray(params[i]["w_b"])
+            deq_wb = np.asarray(dequantize(qp[i]["w_b_q"], ls.w_b))
+            assert np.all(np.abs(deq_wb - w_b) <= 0.5 * ls.w_b * (1 + 1e-6))
+            t = np.asarray(params[i]["t"])
+            deq_t = np.asarray(dequantize(
+                qp[i]["t_q"], np.asarray(ls.t)[None, :, None]))
+            bound_t = 0.5 * np.asarray(ls.t)[None, :, None] * (1 + 1e-6)
+            assert np.all(np.abs(deq_t - t) <= bound_t)
+
+
+def test_symmetric_scale_covers_absmax_without_clipping():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 32)).astype(np.float32) * 3.0
+    s = symmetric_scale(x)
+    q = np.asarray(quantize(x, s))
+    # absmax maps to +-127 exactly: no value saturates past the grid
+    assert q.dtype == np.int8
+    assert int(np.abs(q).max()) == 127
+    assert np.all(np.abs(np.asarray(dequantize(q, s)) - x) <= 0.5 * s * (1 + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# int8 forward: impl agreement + f32 tracking
+# ---------------------------------------------------------------------------
+
+
+def test_int8_forward_jnp_equals_pallas_interpret_bitwise():
+    params, calib_x, scales = _calibrated_small()
+    qp = quantize_stack_params(params, SMALL, scales)
+    x = jnp.asarray(calib_x[:8])
+    y_j = np.asarray(quant_stack_apply(qp, x, SMALL, scales, impl="jnp"))
+    y_p = np.asarray(quant_stack_apply(qp, x, SMALL, scales,
+                                       impl="pallas_interpret"))
+    np.testing.assert_array_equal(y_j, y_p)
+
+
+def test_int8_forward_tracks_f32_reference():
+    params, calib_x, scales = _calibrated_small()
+    qp = quantize_stack_params(params, SMALL, scales)
+    x = jnp.asarray(calib_x[:16])
+    y_q = np.asarray(quant_stack_apply(qp, x, SMALL, scales, impl="jnp"))
+    y_f = np.asarray(vikin_stack_apply(params, x, SMALL, impl="jnp"))
+    assert y_q.dtype == np.float32
+    rel = np.linalg.norm(y_q - y_f) / max(np.linalg.norm(y_f), 1e-12)
+    assert rel < 0.1, f"int8 forward drifted {rel:.3f} from f32"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round trip: params + masks + scales, bit exact
+# ---------------------------------------------------------------------------
+
+
+def test_int8_checkpoint_roundtrip_bit_exact(tmp_path):
+    params, calib_x, scales = _calibrated_small()
+    sp = calibrate_stack(params, SMALL, calib_x,
+                         keep_per_group=keep_per_group_for_rate(0.5))
+    masks = list(sp.masks)
+    save_checkpoint(tmp_path, 7, params, extra={"arch": SMALL.name},
+                    masks=masks, scales=scales)
+
+    template = vikin_stack_init(jax.random.key(99), SMALL)
+    r_params, step, extra = restore_checkpoint(tmp_path, template)
+    assert step == 7 and extra["arch"] == SMALL.name
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(r_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    r_masks = restore_masks(tmp_path)
+    for m, rm in zip(masks, r_masks):
+        if m is None:
+            assert rm is None
+        else:
+            np.testing.assert_array_equal(m.keep, rm.keep)
+
+    r_scales = restore_scales(tmp_path)
+    assert r_scales is not None and len(r_scales) == len(scales)
+    for ls, rs in zip(scales, r_scales):
+        assert rs.kind == ls.kind and rs.x == ls.x
+        if ls.kind == "mlp":
+            np.testing.assert_array_equal(np.asarray(ls.w), np.asarray(rs.w))
+        else:
+            assert rs.w_b == ls.w_b
+            np.testing.assert_array_equal(np.asarray(ls.t), np.asarray(rs.t))
+
+    # the quantized params -- and the int8 served outputs -- are bitwise
+    # identical pre/post restore
+    qp = quantize_stack_params(params, SMALL, scales)
+    r_qp = quantize_stack_params(r_params, SMALL, r_scales)
+    for a, b in zip(jax.tree.leaves(qp), jax.tree.leaves(r_qp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    x = jnp.asarray(calib_x[:4])
+    np.testing.assert_array_equal(
+        np.asarray(quant_stack_apply(qp, x, SMALL, scales,
+                                     impl="jnp", masks=masks)),
+        np.asarray(quant_stack_apply(r_qp, x, SMALL, r_scales,
+                                     impl="jnp", masks=r_masks)))
+
+
+def test_restore_scales_absent_returns_none(tmp_path):
+    params, _, _ = _calibrated_small()
+    save_checkpoint(tmp_path, 3, params)
+    assert restore_scales(tmp_path) is None
+
+
+def test_restore_scales_bad_shape_names_npz_key(tmp_path):
+    params, _, scales = _calibrated_small()
+    save_checkpoint(tmp_path, 3, params, scales=scales)
+    step_dir = tmp_path / "step_3"
+    z = dict(np.load(step_dir / "scales.npz"))
+    assert "t_1" in z  # layer 1 of vikin-small is the KAN layer
+    z["t_1"] = np.ones((2, 3), np.float32)      # should be 1-D per-basis
+    np.savez(step_dir / "scales.npz", **z)
+    with pytest.raises(CheckpointMismatchError, match="t_1"):
+        restore_scales(tmp_path)
+
+
+def test_restore_scales_nonpositive_names_npz_key(tmp_path):
+    params, _, scales = _calibrated_small()
+    save_checkpoint(tmp_path, 3, params, scales=scales)
+    step_dir = tmp_path / "step_3"
+    z = dict(np.load(step_dir / "scales.npz"))
+    z["x_0"] = np.float32(0.0)
+    np.savez(step_dir / "scales.npz", **z)
+    with pytest.raises(CheckpointMismatchError, match="x_0"):
+        restore_scales(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: dtype coercion on restore is opt-in, mismatch names the key
+# ---------------------------------------------------------------------------
+
+
+def test_restore_dtype_mismatch_names_key_and_cast_is_optin(tmp_path):
+    params, _, _ = _calibrated_small()
+    save_checkpoint(tmp_path, 1, params)
+    # target tree wants bf16 for one leaf: the old behavior silently
+    # .astype()'d every leaf; now it must raise and NAME the leaf
+    template = jax.tree.map(lambda a: a, params)
+    template[0]["w"] = jnp.asarray(template[0]["w"], jnp.bfloat16)
+    with pytest.raises(CheckpointMismatchError) as ei:
+        restore_checkpoint(tmp_path, template)
+    msg = str(ei.value)
+    assert "dtype mismatch" in msg and "'w'" in msg and "cast=True" in msg
+    # explicit opt-in coerces, matching the template's dtypes
+    r_params, _, _ = restore_checkpoint(tmp_path, template, cast=True)
+    assert r_params[0]["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(r_params[1]["t"]), np.asarray(params[1]["t"]))
+
+
+# ---------------------------------------------------------------------------
+# serving: batched == single bitwise at int8 through the engine buckets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_int8_batched_equals_single_bitwise(impl):
+    params, calib_x, scales = _calibrated_small()
+    reqs = [calib_x[i] for i in range(6)]
+
+    def backend():
+        return VikinBackend(SMALL, params, impl=impl,
+                            precision="int8", scales=scales)
+
+    eng = Engine(backend(), n_slots=4)
+    rids = [eng.submit(r) for r in reqs]
+    batched = eng.run_until_done()
+    for i, rid in enumerate(rids):
+        e1 = Engine(backend(), n_slots=1)
+        r1 = e1.submit(reqs[i])
+        single = e1.run_until_done()[r1]
+        np.testing.assert_array_equal(batched[rid], single)
+
+
+def test_int8_backend_requires_scales():
+    params, _, _ = _calibrated_small()
+    with pytest.raises(ValueError, match="scales"):
+        VikinBackend(SMALL, params, precision="int8")
+    with pytest.raises(ValueError, match="precision"):
+        VikinBackend(SMALL, params, precision="fp4")
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: the cycle model charges precision-dependent DMA bytes
+# ---------------------------------------------------------------------------
+
+
+def test_serving_report_dma_bytes_scale_with_precision():
+    layers = SMALL.layer_works()
+    hw = VikinHW()
+    d = {p: serving_report(layers, hw, batch=1, precision=p)["dma_bytes"]
+         for p in ("f32", "bf16", "int8")}
+    assert d["f32"] == 4 * d["int8"]
+    assert d["bf16"] == 2 * d["int8"]
+    # cycle counts are precision-INDEPENDENT: only the byte model moves
+    c = {p: serving_report(layers, hw, batch=1, precision=p)["sim_cycles"]
+         for p in ("f32", "bf16", "int8")}
+    assert c["f32"] == c["bf16"] == c["int8"]
+    with pytest.raises(ValueError, match="precision"):
+        serving_report(layers, hw, batch=1, precision="fp4")
+
+
+def test_serving_report_array_precision_must_agree():
+    layers = SMALL.layer_works()
+    hw = VikinHW()
+    arr = VikinArray(hw=hw, n_chips=2, precision="int8")
+    assert arr.bytes_per_feat == precision_bytes("int8")
+    out = serving_report(layers, hw, batch=2, array=arr, precision="int8")
+    assert out["dma_bytes"] > 0
+    with pytest.raises(ValueError, match="precision"):
+        serving_report(layers, hw, batch=2, array=arr, precision="f32")
+
+
+def test_vikin_array_default_bytes_track_f32():
+    arr = VikinArray(hw=VikinHW(), n_chips=2)
+    assert arr.precision == "f32" and arr.bytes_per_feat == 4
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: autotune lookups are backend-namespaced like stores
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_lookup_backend_hit_and_miss(tmp_path):
+    from repro.kernels.autotune import AutotuneCache, cache_key, lookup_blocks
+
+    cache = AutotuneCache(path=str(tmp_path / "autotune.json"))
+    dims = (64, 304, 96)
+    cpu_blocks = {"bm": 64, "bk": 128, "bn": 64}
+    tpu_blocks = {"bm": 256, "bk": 512, "bn": 256}
+    cache.store(cache_key("pattern_matmul", dims, jnp.float32, "cpu"),
+                cpu_blocks)
+    cache.store(cache_key("pattern_matmul", dims, jnp.float32, "tpu"),
+                tpu_blocks)
+    # each backend resolves its OWN tuning; before the fix lookup_blocks
+    # could only key on the ambient jax backend
+    assert lookup_blocks("pattern_matmul", dims, jnp.float32,
+                         cache=cache, backend="cpu") == cpu_blocks
+    assert lookup_blocks("pattern_matmul", dims, jnp.float32,
+                         cache=cache, backend="tpu") == tpu_blocks
+    # a backend nothing tuned for misses instead of borrowing another's
+    assert lookup_blocks("pattern_matmul", dims, jnp.float32,
+                         cache=cache, backend="gpu") is None

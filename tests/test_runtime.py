@@ -47,6 +47,7 @@ def test_failure_injection_raises(tmp_path):
         tr.run()
 
 
+@pytest.mark.slow
 def test_restart_recovers_and_is_deterministic(tmp_path):
     """Kill at step 5, restart from ckpt at 4 -> final params identical to
     an uninterrupted run (deterministic data + step-keyed state)."""
