@@ -313,6 +313,34 @@ def check_serving(base: Dict, fresh: Dict, f: Findings,
                 f.fail(f"{name}.mask_keep_rates",
                        f"{b['mask_keep_rates']} -> "
                        f"{r.get('mask_keep_rates')}")
+        elif name.startswith("kanffn:"):
+            # KAN-FFN transformer serving row (DESIGN.md Sec. 17): every
+            # gated field is the analytical batch=1 per-request figure
+            # (count-independent), plus the hybrid's mode-plan flip
+            # structure and the engine determinism flag.
+            for side in ("dense_mlp", "kanffn"):
+                for k in ("sim_cycles_per_req", "dma_bytes_per_req"):
+                    _cmp(f, f"{name}.{side}.{k}", b[side][k],
+                         r.get(side, {}).get(k), rtol)
+            for k in ("cycle_ratio", "dma_ratio"):
+                _cmp(f, f"{name}.{k}", b[k], r.get(k), rtol)
+            kb, kr = b["kanffn"], r.get("kanffn", {})
+            if kr.get("mode_plan") != kb["mode_plan"]:
+                f.fail(f"{name}.kanffn.mode_plan",
+                       f"{kb['mode_plan']} -> {kr.get('mode_plan')}")
+            if (kr.get("mode_switches_per_req")
+                    != kb["mode_switches_per_req"]):
+                f.fail(f"{name}.kanffn.mode_switches_per_req",
+                       f"{kb['mode_switches_per_req']} -> "
+                       f"{kr.get('mode_switches_per_req')} "
+                       f"(count-independent flips per model instance)")
+            if r.get("ffn_kinds") != b["ffn_kinds"]:
+                f.fail(f"{name}.ffn_kinds",
+                       f"{b['ffn_kinds']} -> {r.get('ffn_kinds')}")
+            if r.get("batched_equals_single") is not True:
+                f.fail(f"{name}.batched_equals_single",
+                       "batched kan-ffn decode no longer token-exact "
+                       "against single-request serving")
         elif name.startswith("trained:"):
             for side in ("dense", "sparse"):
                 _cmp(f, f"{name}.{side}.sim_cycles_per_req",

@@ -14,8 +14,17 @@ matmuls (hidden inside a time scan) are added back analytically.
 MODEL_FLOPS = 6*N*D for training (2*N*D inference), N = active params --
 the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overhead.
 
+``--engine`` switches the tool to the VIKIN serving path instead of the
+dry-run artifacts: per servable arch (vikin-* workloads and kan-ffn
+transformer hybrids) it derives MAC/DMA intensity from the engine cycle
+model itself (core/engine.serving_report against VikinHW / the
+VikinArray host port), so the roofline now covers what the runtime
+actually serves rather than only the TPU training dry-runs.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
-Writes experiments/roofline.json + prints the markdown table.
+       PYTHONPATH=src python -m benchmarks.roofline --engine [--batch 8]
+Writes experiments/roofline.json (or roofline_engine.json) + prints the
+markdown table.
 """
 from __future__ import annotations
 
@@ -172,12 +181,108 @@ def fmt_t(t: float) -> str:
     return f"{t*1e3:9.3f}ms" if t >= 1e-4 else f"{t*1e6:9.1f}us"
 
 
+# ---------------------------------------------------------------------------
+# Engine mode: roofline over the VIKIN serving path (core/engine), not the
+# TPU dry-run artifacts.  Covers every servable arch -- the vikin-* paper
+# workloads and the kan-ffn transformer hybrids -- against the simulated
+# hardware's own roofs: the 32-MAC/cycle datapath and the shared host DMA
+# port (VikinArray.host_bytes_per_cycle).
+# ---------------------------------------------------------------------------
+
+
+def _engine_layer_works(name: str):
+    """(family, layers, precision-independent LayerWork list) for one arch."""
+    from repro.configs.registry import KANFFN_ARCHS
+    from repro.configs.vikin_models import VIKIN_ARCHS
+    if name in VIKIN_ARCHS:
+        return "vikin", VIKIN_ARCHS[name].layer_works()
+    from repro.runtime.backends import transformer_layer_works
+    return "kanffn", transformer_layer_works(KANFFN_ARCHS[name])
+
+
+def engine_rows(batch: int = 1, precision: str = "f32"):
+    """One roofline row per servable arch from the engine cycle model.
+
+    compute_t uses the serving report's cycles (reconfig included -- it is
+    datapath-blocking time); dma_t streams ``dma_bytes`` through the host
+    port at ``host_bytes_per_cycle``.  mac_util is achieved MACs/cycle over
+    the 32-lane peak; the ridge point peak/port-width marks where an arch
+    flips from DMA- to compute-bound.
+    """
+    from repro.configs.registry import KANFFN_ARCHS
+    from repro.configs.vikin_models import VIKIN_ARCHS
+    from repro.core.engine import VikinArray, VikinHW, serving_report
+
+    hw = VikinHW()
+    port = VikinArray().host_bytes_per_cycle
+    peak = float(hw.kan_macs_per_cycle)          # == mlp_out_nodes == 32
+    rows = []
+    for name in [*sorted(VIKIN_ARCHS), *sorted(KANFFN_ARCHS)]:
+        family, layers = _engine_layer_works(name)
+        rep = serving_report(layers, hw, batch=batch, precision=precision)
+        compute_t = rep["sim_cycles"] / hw.clock_hz
+        dma_t = rep["dma_bytes"] / (port * hw.clock_hz)
+        dominant = "compute" if compute_t >= dma_t else "dma"
+        rows.append({
+            "arch": name, "family": family, "batch": batch,
+            "precision": precision, "n_layers": len(layers),
+            "sim_macs": rep["sim_macs"], "sim_cycles": rep["sim_cycles"],
+            "dma_bytes": rep["dma_bytes"],
+            "mode_switches": rep["mode_switches"],
+            "reconfig_frac": rep["reconfig_cycles"] / rep["sim_cycles"],
+            "compute_t": compute_t, "dma_t": dma_t, "dominant": dominant,
+            "step_t": max(compute_t, dma_t),
+            "macs_per_byte": rep["sim_macs"] / rep["dma_bytes"],
+            "ridge_macs_per_byte": peak / port,
+            "mac_util": rep["sim_macs"] / (rep["sim_cycles"] * peak),
+        })
+    return rows
+
+
+def engine_main(args) -> list:
+    rows = engine_rows(batch=args.batch, precision=args.precision)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    hdr = (f"| {'arch':20s} | {'fam':6s} | {'compute':11s} | {'dma':11s} | "
+           f"bound   | {'mac/B':6s} | {'util':5s} | {'flips':5s} |")
+    print(hdr)
+    print("|" + "-" * (len(hdr) - 2) + "|")
+    for r in rows:
+        print(f"| {r['arch']:20s} | {r['family']:6s} | "
+              f"{fmt_t(r['compute_t'])} | {fmt_t(r['dma_t'])} | "
+              f"{r['dominant']:7s} | {r['macs_per_byte']:6.2f} | "
+              f"{r['mac_util']:5.2f} | {r['mode_switches']:5.0f} |")
+    ridge = rows[0]["ridge_macs_per_byte"] if rows else 0.0
+    print(f"\nridge point: {ridge:.2f} MACs/byte (peak MACs/cycle over the "
+          f"shared host-port width)")
+    worst = min(rows, key=lambda r: r["mac_util"])
+    print(f"lowest MAC utilization  : {worst['arch']} "
+          f"({worst['mac_util']:.2f})")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single")
-    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--engine", action="store_true",
+                    help="roofline the VIKIN serving path (vikin-* and "
+                         "kan-ffn archs via the engine cycle model) instead "
+                         "of the TPU dry-run artifacts")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="served batch size for --engine rows")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "f16", "bf16", "int8"],
+                    help="served dtype for --engine DMA accounting")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = ("experiments/roofline_engine.json" if args.engine
+                    else "experiments/roofline.json")
+    if args.engine:
+        return engine_main(args)
 
     rows = []
     for path in sorted(glob.glob(os.path.join(args.dir, f"*__{args.mesh}.json"))):

@@ -283,6 +283,82 @@ def trained_dense_vs_sparse(arch: str = "vikin-mlp3", *, steps: int = 150,
     }
 
 
+def kanffn_dense_vs_kan(arch: str = "kanffn-ci", *, n_check: int = 6,
+                        n_slots: int = 4, impl: str = "jnp",
+                        seed: int = 0) -> Dict:
+    """KAN-FFN transformer vs its dense-MLP twin through the VIKIN model.
+
+    The ``kanffn:*`` row (DESIGN.md Sec. 17): the same transformer arch
+    served with its "kan" layers routed through the fused KAN kernel +
+    pattern matmul versus an all-"mlp" twin of identical dims, with the
+    analytical batch=1 per-request figures side by side -- sim cycles, DMA
+    bytes, the hybrid's mode-plan flip structure -- plus the engine
+    determinism flag (batched greedy decode == single-request decode,
+    token-exact).  Train-free and count-independent in every gated field,
+    so the smoke jobs can re-emit it at any --requests/--train-steps.
+    """
+    import dataclasses
+
+    from repro.configs.registry import KANFFN_ARCHS
+    from repro.core.engine import serving_report
+    from repro.models import transformer as T
+    from repro.runtime.backends import TransformerBackend
+
+    cfg = KANFFN_ARCHS[arch]
+    dense_cfg = dataclasses.replace(
+        cfg, name=cfg.name + "-dense",
+        ffn_kinds=tuple("mlp" for _ in cfg.ffn_kinds))
+
+    def side(c):
+        params = T.init_params(jax.random.key(seed), c)
+        b = TransformerBackend(c, params, impl=impl)
+        rep = serving_report(b.layers, b.hw, batch=1,
+                             precision=b.precision)
+        plan = b.plan.summary()
+        row = {
+            "sim_cycles_per_req": rep["sim_cycles"],
+            "dma_bytes_per_req": rep["dma_bytes"],
+            "mode_plan": plan["segments"],
+            "mode_switches_per_req": plan["n_switches"],
+        }
+        return b, row
+
+    backend, kan = side(cfg)
+    _, dense = side(dense_cfg)
+
+    # batched greedy decode == single-request decode, token-exact: one
+    # multi-slot engine vs fresh engines (same n_slots, one request each)
+    # over the same backend instance, so the jit caches are shared
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 9))).astype(np.int32)
+               for _ in range(n_check)]
+    eng = Engine(backend, n_slots=n_slots, max_len=32)
+    rids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    batched = eng.run_until_done()
+    singles = []
+    for p in prompts:
+        eng1 = Engine(backend, n_slots=n_slots, max_len=32)
+        rid1 = eng1.submit(p, max_new_tokens=4)
+        singles.append(eng1.run_until_done()[rid1])
+    batched_eq = all(batched[rid] == singles[i]
+                     for i, rid in enumerate(rids))
+
+    return {
+        "arch": arch,
+        "ffn_kinds": list(cfg.ffn_kinds),
+        "requests": n_check,
+        "n_slots": n_slots,
+        "dense_mlp": dense,
+        "kanffn": kan,
+        "cycle_ratio": (kan["sim_cycles_per_req"]
+                        / max(dense["sim_cycles_per_req"], 1e-9)),
+        "dma_ratio": (kan["dma_bytes_per_req"]
+                      / max(dense["dma_bytes_per_req"], 1e-9)),
+        "batched_equals_single": bool(batched_eq),
+    }
+
+
 # served-accuracy bound for the quant:* row: int8-sparse val mse may not
 # exceed this multiple of the dense-f32 val mse.  The bound itself is the
 # committed, count-independent contract (check_regression compares it for
@@ -411,11 +487,25 @@ def run(n_requests: int = 32, n_slots: int = 8,
                   f"XLA_FLAGS=--xla_force_host_platform_device_count=4 "
                   f"to refresh them")
             results.update(carried)
+    # train-free and count-independent in its gated fields, so it is
+    # emitted on EVERY run (both smoke jobs re-gate it)
+    krow = kanffn_dense_vs_kan()
+    results[f"kanffn:{krow['arch']}"] = krow
     if trained:
         row = trained_dense_vs_sparse(steps=train_steps, n_slots=n_slots)
         results[f"trained:{row['arch']}"] = row
         qrow = quant_dense_vs_int8(steps=train_steps, n_slots=n_slots)
         results[f"quant:{qrow['arch']}"] = qrow
+    else:
+        # train-free run: carry the committed trained:/quant: rows forward
+        # verbatim (same contract as the sharded/openloop carry below), so
+        # --no-trained never deletes gated rows from the artifact
+        carried = {k: v for k, v in prev.items()
+                   if k.startswith(("trained:", "quant:"))}
+        if carried:
+            print(f"[serving_bench] --no-trained: carrying {len(carried)} "
+                  f"committed trained:/quant: row(s) forward un-re-measured")
+            results.update(carried)
     # openloop:* rows belong to benchmarks/loadgen_bench.py -- always carry
     # the committed ones forward so a serving_bench refresh never deletes
     # them from the gated artifact (run loadgen_bench after to refresh)
@@ -466,6 +556,17 @@ def main() -> None:
         if a.startswith("openloop:"):
             # loadgen_bench's rows, carried forward verbatim; it prints
             # its own summary when run
+            continue
+        if a.startswith("kanffn:"):
+            k, d = r["kanffn"], r["dense_mlp"]
+            print(f"{a}: dense-mlp {d['sim_cycles_per_req']:.0f} cyc / "
+                  f"{d['dma_bytes_per_req']:.0f} B -> kan-ffn "
+                  f"{k['sim_cycles_per_req']:.0f} cyc / "
+                  f"{k['dma_bytes_per_req']:.0f} B "
+                  f"({r['cycle_ratio']:.2f}x cycles, "
+                  f"{r['dma_ratio']:.2f}x dma, "
+                  f"{k['mode_switches_per_req']} flips/req, "
+                  f"batched_equals_single={r['batched_equals_single']})")
             continue
         if a.startswith("trained:"):
             print(f"{a}: dense mse {r['dense']['val_mse']:.5f} / "

@@ -14,6 +14,17 @@ from repro.models.rglru import RGLRUConfig
 from repro.models.xlstm import XLSTMConfig
 
 
+class ArchConfigError(ValueError):
+    """Invalid ArchConfig field combination, raised at CONSTRUCTION time.
+
+    Bad per-layer ``ffn_kinds`` used to surface as a shape-mismatch crash
+    deep inside ``models/transformer.block_init``; validating here turns
+    that into a named, actionable error at registry/config build."""
+
+
+FFN_LAYER_KINDS = ("kan", "mlp", "moe")
+
+
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
     name: str
@@ -57,6 +68,15 @@ class ArchConfig:
     kan_grid: int = 4
     kan_order: int = 3
     kan_hidden: Optional[int] = None
+    # per-layer FFN kinds for KAN-FFN hybrids (DESIGN.md Sec. 17):
+    # "kan" routes that layer's FFN through the fused KAN kernel +
+    # pattern-matmul, "mlp" keeps the config's ffn_kind, "moe" passes
+    # through to the MoE block.  None = homogeneous stack (status quo).
+    ffn_kinds: Optional[Tuple[str, ...]] = None
+    ffn_impl: str = "auto"             # kernel dispatch for kan-ffn layers
+    # per-layer calibrated masks for "kan" entries: None | a
+    # (basis_keep tuple | None, hidden_keep tuple | None) pair per layer
+    ffn_masks: Optional[Tuple] = None
     # execution
     scan_layers: bool = True
     remat: bool = True
@@ -67,6 +87,49 @@ class ArchConfig:
     # extra cache slots beyond seq_len; 16 keeps cache seq lengths divisible
     # by the model-axis size so KV caches stay sequence-shardable
     decode_margin: int = 16
+
+    # ------------------------------------------------------------ validate
+    def __post_init__(self):
+        if self.ffn_kinds is None:
+            if self.ffn_masks is not None:
+                raise ArchConfigError(
+                    f"{self.name}: ffn_masks requires ffn_kinds")
+            return
+        if len(self.ffn_kinds) != self.n_layers:
+            raise ArchConfigError(
+                f"{self.name}: ffn_kinds has {len(self.ffn_kinds)} entries "
+                f"for n_layers={self.n_layers}")
+        bad = [k for k in self.ffn_kinds if k not in FFN_LAYER_KINDS]
+        if bad:
+            raise ArchConfigError(
+                f"{self.name}: unknown ffn_kinds entries {bad!r} "
+                f"(must be one of {FFN_LAYER_KINDS})")
+        if "moe" in self.ffn_kinds and not self.is_moe:
+            raise ArchConfigError(
+                f"{self.name}: ffn_kinds uses 'moe' but n_experts == 0")
+        if "kan" in self.ffn_kinds and self.d_ff <= 0:
+            raise ArchConfigError(
+                f"{self.name}: ffn_kinds uses 'kan' but d_ff == 0")
+        if self.scan_layers:
+            # per-layer FFN shapes cannot be jnp.stack'ed into scan units
+            raise ArchConfigError(
+                f"{self.name}: ffn_kinds requires scan_layers=False "
+                "(per-layer param trees are not stackable)")
+        if self.ffn_masks is not None:
+            if len(self.ffn_masks) != self.n_layers:
+                raise ArchConfigError(
+                    f"{self.name}: ffn_masks has {len(self.ffn_masks)} "
+                    f"entries for n_layers={self.n_layers}")
+            for i, (m, k) in enumerate(zip(self.ffn_masks, self.ffn_kinds)):
+                if m is None:
+                    continue
+                if k != "kan":
+                    raise ArchConfigError(
+                        f"{self.name}: ffn_masks[{i}] set on a {k!r} layer")
+                if len(m) != 2:
+                    raise ArchConfigError(
+                        f"{self.name}: ffn_masks[{i}] must be a "
+                        "(basis_keep, hidden_keep) pair")
 
     # ---------------------------------------------------------------- props
     @property
@@ -104,7 +167,27 @@ class ArchConfig:
         return dataclasses.replace(self.attn_cfg(), causal=False,
                                    window=None)
 
-    def ffn_cfg(self) -> FFNConfig:
+    def layer_ffn_kind(self, layer: int) -> str:
+        """Per-layer FFN routing: "kan" | "mlp" | "moe" | "none"."""
+        if self.ffn_kinds is not None:
+            return self.ffn_kinds[layer]
+        if self.is_moe:
+            return "moe"
+        return "mlp" if self.d_ff > 0 else "none"
+
+    def ffn_cfg(self, layer: int = 0) -> FFNConfig:
+        if self.layer_ffn_kind(layer) == "kan":
+            bk, hk = (None, None)
+            if self.ffn_masks is not None and self.ffn_masks[layer]:
+                bk, hk = self.ffn_masks[layer]
+            return FFNConfig(
+                d_model=self.d_model, d_ff=self.d_ff, kind="kanffn",
+                act=self.act, bias=self.ffn_bias,
+                pattern_rate=self.pattern_rate, kan_grid=self.kan_grid,
+                kan_order=self.kan_order, kan_hidden=self.kan_hidden,
+                kan_impl=self.ffn_impl,
+                basis_keep=None if bk is None else tuple(bk),
+                hidden_keep=None if hk is None else tuple(hk))
         return FFNConfig(
             d_model=self.d_model, d_ff=self.d_ff, kind=self.ffn_kind,
             act=self.act, bias=self.ffn_bias,
@@ -153,6 +236,15 @@ class ArchConfig:
             loss_chunks=1,
         )
         defaults.update(over)
+        if self.ffn_kinds is not None:
+            nl = defaults.get("n_layers", self.n_layers)
+            if "ffn_kinds" not in defaults:
+                kinds = tuple((self.ffn_kinds * nl)[:nl])
+                if "kan" in self.ffn_kinds and "kan" not in kinds:
+                    kinds = kinds[:-1] + ("kan",)
+                defaults["ffn_kinds"] = kinds
+            # calibrated masks are width-specific; a reduced arch is dense
+            defaults.setdefault("ffn_masks", None)
         return dataclasses.replace(self, **defaults)
 
 

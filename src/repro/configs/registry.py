@@ -1,6 +1,7 @@
 """Architecture registry: ``--arch <id>`` resolution for every launcher."""
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Tuple
 
 from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
@@ -26,6 +27,31 @@ _MODULES = (
 
 ARCHS: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
 
+# KAN-FFN hybrids (DESIGN.md Sec. 17): zoo archs re-tiled with per-layer
+# ``ffn_kinds`` so their FFNs route through the fused VIKIN kernels.  Kept
+# OUT of ARCHS on purpose -- they are serving-path variants of existing zoo
+# entries, not new dry-run grid cells (runnable_cells stays pinned).
+# Validation happens at construction (ArchConfigError), so a typo'd kinds
+# tuple fails HERE, not deep inside block_init.
+KANFFN_ARCHS: Dict[str, ArchConfig] = {
+    # qwen2-0.5b with every other FFN routed through the KAN kernels
+    "qwen2-0.5b-kanffn": dataclasses.replace(
+        qwen2_0_5b.CONFIG,
+        name="qwen2-0.5b-kanffn",
+        ffn_kinds=tuple("kan" if i % 2 == 0 else "mlp"
+                        for i in range(qwen2_0_5b.CONFIG.n_layers)),
+        scan_layers=False,
+    ),
+    # xlstm-125m-class CI variant: small enough to serve train-free in the
+    # smoke lane, mixed kinds so the ModePlan has real flips to pin
+    "kanffn-ci": ArchConfig(
+        name="kanffn-ci", family="dense", n_layers=3, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+        ffn_kinds=("mlp", "kan", "mlp"), scan_layers=False,
+        dtype="float32", remat=False, loss_chunks=1,
+    ),
+}
+
 
 def get_config(name: str) -> ArchConfig:
     if name not in ARCHS:
@@ -35,13 +61,18 @@ def get_config(name: str) -> ArchConfig:
 
 def get_serving_config(name: str) -> Tuple[str, object]:
     """Resolve a serving ``--arch``: ("vikin", PaperModelConfig) for the
-    KAN/MLP feed-forward backend, ("transformer", ArchConfig) otherwise."""
+    KAN/MLP feed-forward backend, ("transformer", ArchConfig) otherwise
+    (kan-ffn hybrids resolve as transformers; the backend routes their
+    FFN layers through the VIKIN kernels)."""
     if name in VIKIN_ARCHS:
         return "vikin", VIKIN_ARCHS[name]
+    if name in KANFFN_ARCHS:
+        return "transformer", KANFFN_ARCHS[name]
     if name in ARCHS:
         return "transformer", ARCHS[name]
     raise KeyError(
         f"unknown arch {name!r}; transformer archs: {sorted(ARCHS)}; "
+        f"kan-ffn archs: {sorted(KANFFN_ARCHS)}; "
         f"vikin archs: {sorted(VIKIN_ARCHS)}")
 
 

@@ -153,6 +153,61 @@ def masked_pattern_rates(masks: Sequence[Optional[PatternMask]]
     return [0.0 if m is None else float(m.sparsity) for m in masks]
 
 
+def calibrate_kanffn_masks(params, cfg, tokens: np.ndarray, *,
+                           keep_per_group: int = 2,
+                           impl: str = "jnp") -> Tuple:
+    """Two-stage masks for every "kan" FFN layer of a transformer arch.
+
+    One dense forward over ``tokens`` captures each layer's normed FFN
+    input (models/transformer.forward ffn_taps); per "kan" layer the same
+    saliency machinery as the stack path then emits
+
+      * stage 1 -- ``kan_basis_saliency`` over the up-projection's basis
+        dimension -> kept basis indices (the fused kernel's kb), and
+      * stage 2 -- ``mlp_input_saliency`` over the HIDDEN activations the
+        dense up-projection produces -> kept hidden lanes into the
+        down-projection's pattern matmul.
+
+    Returns an ``ArchConfig.ffn_masks`` tuple: one entry per layer, None
+    for non-kan layers, else (basis_keep, hidden_keep) index tuples.
+    Host-side numpy over a fixed batch: fixed seed => bit-identical masks.
+    """
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    from repro.core.kan import kan_apply
+    from repro.models.transformer import forward
+
+    if cfg.ffn_kinds is None:
+        raise ValueError(f"{cfg.name}: not a kan-ffn arch (ffn_kinds unset)")
+    if not 1 <= keep_per_group <= GROUP:
+        raise ValueError(f"keep_per_group must be in [1, {GROUP}]")
+    dense_cfg = _dc.replace(cfg, ffn_masks=None, pattern_rate=0.0,
+                            ffn_impl=impl)
+    taps: dict = {}
+    forward(params, dense_cfg, jnp.asarray(tokens), ffn_taps=taps)
+    out: List[Optional[tuple]] = []
+    for i, kind in enumerate(cfg.ffn_kinds):
+        if kind != "kan" or keep_per_group == GROUP:
+            out.append(None)
+            continue
+        p = params["extra"][i]["ffn"]
+        fcfg = dense_cfg.ffn_cfg(i)
+        up_cfg = fcfg.kanffn_up_cfg()
+        tap = np.asarray(jax.device_get(taps[i]), np.float32)
+        tap2 = tap.reshape(-1, tap.shape[-1])
+        s1 = kan_basis_saliency(p["kan_up"], up_cfg.spec, tap2)
+        bk = magnitude_mask(s1, keep_per_group)
+        hid = np.asarray(jax.device_get(
+            kan_apply(p["kan_up"], jnp.asarray(tap2), up_cfg)), np.float32)
+        s2 = mlp_input_saliency({"w": p["w"]}, hid)
+        hk = magnitude_mask(s2, keep_per_group)
+        out.append((tuple(int(j) for j in bk.indices()),
+                    tuple(int(j) for j in hk.indices())))
+    return tuple(out)
+
+
 def calibrate_scales(params, model, calib_x: np.ndarray, *,
                      impl: str = "jnp"):
     """Derive per-layer symmetric int8 scales from the calibration batch.

@@ -266,7 +266,18 @@ def _serve_transformer(args, cfg):
         params = restored["params"]
         print(f"restored params from step {step}")
 
-    srv = Server(cfg, params, n_slots=args.slots, max_len=args.max_len)
+    kanffn = cfg.ffn_kinds is not None
+    srv = Server(cfg, params, n_slots=args.slots, max_len=args.max_len,
+                 impl=args.impl if kanffn and args.impl != "auto" else None,
+                 precision=args.precision)
+    if kanffn:
+        plan = srv.backend.plan.summary()
+        print(f"arch {cfg.name}: kan-ffn hybrid, ffn_kinds="
+              f"{list(cfg.ffn_kinds)} impl={srv.backend.cfg.ffn_impl} "
+              f"precision={args.precision}")
+        print(f"mode plan: {plan['segments']} "
+              f"({plan['n_switches']} switches, "
+              f"{plan['reconfig_cycles']} reconfig cycles/instance)")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         n = int(rng.integers(3, 16))
@@ -278,6 +289,11 @@ def _serve_transformer(args, cfg):
     s = srv.stats
     print(f"\n{int(s['served'])} requests, {int(s['ticks'])} ticks, "
           f"wall {s['wall_s']:.2f} s")
+    if kanffn:
+        print(f"simulated VIKIN: {s['sim_cycles']:.0f} cycles, "
+              f"{s['sim_latency_s']*1e6:.1f} us, "
+              f"{int(s['mode_switches'])} mode switches "
+              f"({s['reconfig_cycles']:.0f} reconfig cycles)")
 
 
 def main():
@@ -303,7 +319,7 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--impl", default="auto",
                     choices=["auto", "jnp", "pallas", "pallas_interpret"],
-                    help="kernel dispatch for vikin-* archs")
+                    help="kernel dispatch for vikin-* and kan-ffn archs")
     ap.add_argument("--precision", default="f32",
                     choices=["f32", "bf16", "int8"],
                     help="vikin archs: served precision (DESIGN.md Sec. "
@@ -363,11 +379,19 @@ def main():
             raise SystemExit(
                 "--max-queue/--admission are vikin-only here; the "
                 "transformer Server keeps the unbounded back-compat path")
+        cfg = resolved[0][1]
         if args.precision != "f32":
-            raise SystemExit(
-                f"--precision is vikin-only (core/quant int8 path); "
-                f"{args.arch!r} would silently serve f32 anyway")
-        _serve_transformer(args, resolved[0][1])
+            # kan-ffn transformers serve bf16 through the same backend
+            # cast path as vikin; int8 stays vikin-only (core/quant)
+            if cfg.ffn_kinds is None:
+                raise SystemExit(
+                    f"--precision is vikin/kan-ffn-only; plain arch "
+                    f"{args.arch!r} would silently serve f32 anyway")
+            if args.precision == "int8":
+                raise SystemExit(
+                    "--precision int8 is vikin-only (core/quant path); "
+                    "kan-ffn transformers serve f32 or bf16")
+        _serve_transformer(args, cfg)
 
 
 if __name__ == "__main__":

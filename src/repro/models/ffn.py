@@ -19,6 +19,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kan import KANConfig, kan_apply, kan_init
 from repro.core.sparsity import PatternMask, sparsity_to_pattern, tiled_mask
@@ -31,7 +32,7 @@ from repro.models.layers import ACT_FNS, dense, dense_init
 class FFNConfig:
     d_model: int
     d_ff: int
-    kind: str = "swiglu"            # mlp | swiglu | geglu | kan
+    kind: str = "swiglu"            # mlp | swiglu | geglu | kan | kanffn
     act: str = "gelu"               # for kind == "mlp"
     bias: bool = False
     # stage-2 pattern sparsity over the hidden dim (MLP) / bases (KAN)
@@ -46,10 +47,16 @@ class FFNConfig:
     # the autotune cache (repro.kernels.autotune) so tuned shapes are
     # served tuned tiles in every transformer layer.
     kan_blocks: Optional[Tuple[int, int, int]] = None
+    # kind == "kanffn": calibrated two-stage masks (DESIGN.md Sec. 17).
+    # Stage 1 keeps these basis indices of the KAN up-projection (None =
+    # derive a tiled mask from pattern_rate, or dense when that is 0);
+    # stage 2 keeps these hidden lanes into the down-projection.
+    basis_keep: Optional[Tuple[int, ...]] = None
+    hidden_keep: Optional[Tuple[int, ...]] = None
 
     @property
     def hidden_mask(self) -> Optional[PatternMask]:
-        if self.pattern_rate <= 0.0 or self.kind == "kan":
+        if self.pattern_rate <= 0.0 or self.kind in ("kan", "kanffn"):
             return None
         return tiled_mask(self.d_ff, sparsity_to_pattern(self.pattern_rate))
 
@@ -64,6 +71,38 @@ class FFNConfig:
                          impl=self.kan_impl, version=self.kan_version,
                          blocks=self.kan_blocks)
         return up, down
+
+    # -------------------------------------------------- kind == "kanffn"
+    @property
+    def kanffn_hidden(self) -> int:
+        """Param-matched hidden width for the kan-up + linear-down FFN.
+
+        Up carries h*d_model*(n_bases+1) params, down h*d_model, so
+        h = 2*d_ff/(n_bases+2) matches the dense MLP's 2*d_model*d_ff.
+        """
+        spec = SplineSpec(self.kan_grid, self.kan_order)
+        return self.kan_hidden or max(8, 2 * self.d_ff // (spec.n_bases + 2))
+
+    def kanffn_up_cfg(self) -> KANConfig:
+        spec = SplineSpec(self.kan_grid, self.kan_order)
+        pat = (sparsity_to_pattern(self.pattern_rate)
+               if self.basis_keep is None and self.pattern_rate > 0
+               else None)
+        return KANConfig(self.d_model, self.kanffn_hidden, spec,
+                         pattern=pat, basis_keep=self.basis_keep,
+                         impl=self.kan_impl, version=self.kan_version,
+                         blocks=self.kan_blocks)
+
+    def kanffn_hidden_mask(self) -> Optional[PatternMask]:
+        """Stage-2 mask over the hidden lanes feeding the down-projection."""
+        h = self.kanffn_hidden
+        if self.hidden_keep is not None:
+            keep = np.zeros(h, bool)
+            keep[np.asarray(self.hidden_keep, np.int64)] = True
+            return PatternMask(keep)
+        if self.pattern_rate > 0:
+            return tiled_mask(h, sparsity_to_pattern(self.pattern_rate))
+        return None
 
 
 def ffn_init(key, cfg: FFNConfig, dtype=jnp.float32) -> Dict:
@@ -86,6 +125,22 @@ def ffn_init(key, cfg: FFNConfig, dtype=jnp.float32) -> Dict:
         up = kan_init(ks[0], up_cfg, dtype)
         down = kan_init(ks[1], down_cfg, dtype)
         return {"kan_up": up, "kan_down": down}
+    if cfg.kind == "kanffn":
+        # KAN up-projection + plain linear down-projection, the FFN shape
+        # of the edge-KAN accelerator line (DESIGN.md Sec. 17).  Key names
+        # are load-bearing: "kan_up"/"t" feeds kan_basis_saliency and "w"
+        # feeds mlp_input_saliency unmodified (core/calibrate.py).
+        h = cfg.kanffn_hidden
+        # init against the DENSE up config: masks are serving-time overlays,
+        # params must not change shape when calibration lands a mask
+        up_cfg = dataclasses.replace(cfg.kanffn_up_cfg(),
+                                     pattern=None, basis_keep=None)
+        return {
+            "kan_up": kan_init(ks[0], up_cfg, dtype),
+            "w": (jax.random.normal(ks[1], (h, cfg.d_model), dtype)
+                  * float(np.sqrt(2.0 / h))),
+            "b": jnp.zeros((cfg.d_model,), dtype),
+        }
     raise ValueError(f"unknown ffn kind {cfg.kind!r}")
 
 
@@ -139,7 +194,39 @@ def ffn_apply(params: Dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:
         up_cfg, down_cfg = cfg.kan_cfgs()
         h = kan_apply(params["kan_up"], x, up_cfg)
         return kan_apply(params["kan_down"], h, down_cfg)
+    if cfg.kind == "kanffn":
+        return kan_ffn_apply(params, x, cfg)
     raise ValueError(cfg.kind)
+
+
+def kan_ffn_apply(params: Dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:
+    """KAN-FFN: fused-v2 KAN up-projection, pattern-sparse linear down.
+
+    Stage-1 (basis_keep / tiled from pattern_rate) compacts the spline
+    contraction inside the fused kernel; stage-2 (hidden_keep) statically
+    compacts the hidden lanes entering the down matmul.  Position-
+    independent by construction (no sequence mixing), so decode and
+    prefill agree bitwise token for token.
+
+    Interpret-mode block rule (DESIGN.md Sec. 17): both kernels are forced
+    to a SINGLE k-tile so their tile accumulation collapses to one dot --
+    that is what makes the pallas_interpret path bitwise-equal to the jnp
+    oracle (k-split accumulation orders differ; M/N tiling cannot).
+    Explicit ``kan_blocks`` overrides win; real-TPU runs keep the
+    autotune-cache resolution.
+    """
+    up_cfg = cfg.kanffn_up_cfg()
+    mask = cfg.kanffn_hidden_mask()
+    h = cfg.kanffn_hidden
+    down_blocks = None
+    if cfg.kan_impl == "pallas_interpret" and cfg.kan_blocks is None:
+        up_cfg = dataclasses.replace(
+            up_cfg, blocks=(8, cfg.d_model, max(h, 8)))
+        kc = mask.n_keep if mask is not None else h
+        down_blocks = (8, kc, max(cfg.d_model, 8))
+    hid = kan_apply(params["kan_up"], x, up_cfg)
+    return pattern_linear(hid, params["w"], mask, params["b"], act=None,
+                          impl=cfg.kan_impl, blocks=down_blocks)
 
 
 # ---------------------------------------------------------------------------

@@ -72,7 +72,7 @@ def _norm(cfg: ArchConfig, p, x):
 # ---------------------------------------------------------------------------
 
 def block_init(key, cfg: ArchConfig, kind: str, *, cross: bool = False,
-               causal: bool = True) -> Params:
+               causal: bool = True, layer: int = 0) -> Params:
     dtype = cfg.param_dtype
     ks = jax.random.split(key, 8)
     if kind == "attn":
@@ -82,19 +82,20 @@ def block_init(key, cfg: ArchConfig, kind: str, *, cross: bool = False,
         if cross:
             p["cross_norm"] = _norm_init(cfg, dtype)
             p["cross"] = A.cross_attn_init(ks[1], cfg.attn_cfg(), dtype)
-        if cfg.is_moe:
+        fk = cfg.layer_ffn_kind(layer)
+        if fk == "moe":
             p["moe_norm"] = _norm_init(cfg, dtype)
             p["moe"] = M.moe_init_with_shared(ks[2], cfg.moe_cfg(), dtype)
-        elif cfg.d_ff > 0:
+        elif fk != "none" and cfg.d_ff > 0:
             p["ffn_norm"] = _norm_init(cfg, dtype)
-            p["ffn"] = F.ffn_init(ks[2], cfg.ffn_cfg(), dtype)
+            p["ffn"] = F.ffn_init(ks[2], cfg.ffn_cfg(layer), dtype)
         return p
     if kind == "rec":
         p = {"rec_norm": _norm_init(cfg, dtype),
              "rec": R.rglru_init(ks[0], cfg.rglru_cfg(), dtype)}
         if cfg.d_ff > 0:
             p["ffn_norm"] = _norm_init(cfg, dtype)
-            p["ffn"] = F.ffn_init(ks[1], cfg.ffn_cfg(), dtype)
+            p["ffn"] = F.ffn_init(ks[1], cfg.ffn_cfg(layer), dtype)
         return p
     if kind == "mlstm":
         return {"mlstm": X.mlstm_init(ks[0], cfg.xlstm_cfg(), dtype)}
@@ -103,22 +104,29 @@ def block_init(key, cfg: ArchConfig, kind: str, *, cross: bool = False,
     raise ValueError(kind)
 
 
-def _apply_ffn_part(p: Params, x, cfg: ArchConfig):
+def _apply_ffn_part(p: Params, x, cfg: ArchConfig, layer: int = 0,
+                    taps: Optional[Dict[int, jax.Array]] = None):
     aux = jnp.zeros((), jnp.float32)
     if "moe" in p:
         r = M.moe_apply(p["moe"], _norm(cfg, p["moe_norm"], x), cfg.moe_cfg())
         x = x + r["out"]
         aux = r["aux_loss"]
     elif "ffn" in p:
-        x = x + F.ffn_apply(p["ffn"], _norm(cfg, p["ffn_norm"], x),
-                            cfg.ffn_cfg())
+        xn = _norm(cfg, p["ffn_norm"], x)
+        if taps is not None:
+            # calibration hook: the normed FFN INPUT of this layer (what
+            # the saliency machinery in core/calibrate scores against)
+            taps[layer] = xn
+        x = x + F.ffn_apply(p["ffn"], xn, cfg.ffn_cfg(layer))
     return x, aux
 
 
 def block_apply(p: Params, x, cfg: ArchConfig, kind: str, *,
                 causal: bool = True,
                 prefix_len: Optional[jax.Array] = None,
-                memory: Optional[jax.Array] = None):
+                memory: Optional[jax.Array] = None,
+                layer: int = 0,
+                taps: Optional[Dict[int, jax.Array]] = None):
     """Training/encoding path (no cache).  Returns (x, aux_loss)."""
     if kind == "attn":
         acfg = cfg.attn_cfg() if causal else cfg.enc_attn_cfg()
@@ -128,12 +136,12 @@ def block_apply(p: Params, x, cfg: ArchConfig, kind: str, *,
             x = x + A.cross_attention(
                 p["cross"], _norm(cfg, p["cross_norm"], x), memory,
                 cfg.attn_cfg())
-        return _apply_ffn_part(p, x, cfg)
+        return _apply_ffn_part(p, x, cfg, layer, taps)
     if kind == "rec":
         y, _ = R.rglru_apply(p["rec"], _norm(cfg, p["rec_norm"], x),
                              cfg.rglru_cfg())
         x = x + y
-        return _apply_ffn_part(p, x, cfg)
+        return _apply_ffn_part(p, x, cfg, layer, taps)
     if kind == "mlstm":
         y, _ = X.mlstm_apply(p["mlstm"], x, cfg.xlstm_cfg())
         return y, jnp.zeros((), jnp.float32)
@@ -165,7 +173,7 @@ def block_init_cache(batch: int, max_len: int, cfg: ArchConfig, kind: str,
 
 
 def block_prefill(p: Params, x, cfg: ArchConfig, kind: str, max_len: int, *,
-                  prefix_len=None, memory=None):
+                  prefix_len=None, memory=None, layer: int = 0):
     """Full-sequence pass that also returns the decode cache."""
     if kind == "attn":
         acfg = cfg.attn_cfg()
@@ -185,13 +193,13 @@ def block_prefill(p: Params, x, cfg: ArchConfig, kind: str, max_len: int, *,
                 B, Sk, acfg.n_kv_heads, hd)
             cache["cv"] = dense(p["cross"]["wv"], memory).reshape(
                 B, Sk, acfg.n_kv_heads, hd)
-        x, _ = _apply_ffn_part(p, x, cfg)
+        x, _ = _apply_ffn_part(p, x, cfg, layer)
         return x, cache
     if kind == "rec":
         y, st = R.rglru_apply(p["rec"], _norm(cfg, p["rec_norm"], x),
                               cfg.rglru_cfg())
         x = x + y
-        x, _ = _apply_ffn_part(p, x, cfg)
+        x, _ = _apply_ffn_part(p, x, cfg, layer)
         return x, st
     if kind == "mlstm":
         return X.mlstm_apply(p["mlstm"], x, cfg.xlstm_cfg())
@@ -212,7 +220,8 @@ def _cross_decode(p, x1, cache, acfg: A.AttnConfig):
     return dense(p["wo"], o)
 
 
-def block_decode(p: Params, x1, cfg: ArchConfig, kind: str, cache: Params):
+def block_decode(p: Params, x1, cfg: ArchConfig, kind: str, cache: Params,
+                 *, layer: int = 0):
     """One-token step.  Returns (x1, new_cache)."""
     if kind == "attn":
         acfg = cfg.attn_cfg()
@@ -226,13 +235,13 @@ def block_decode(p: Params, x1, cfg: ArchConfig, kind: str, cache: Params):
         if "cross" in p and "ck" in cache:
             x1 = x1 + _cross_decode(
                 p["cross"], _norm(cfg, p["cross_norm"], x1), cache, acfg)
-        x1, _ = _apply_ffn_part(p, x1, cfg)
+        x1, _ = _apply_ffn_part(p, x1, cfg, layer)
         return x1, new_cache
     if kind == "rec":
         y, st = R.rglru_decode_step(
             p["rec"], _norm(cfg, p["rec_norm"], x1), cfg.rglru_cfg(), cache)
         x1 = x1 + y
-        x1, _ = _apply_ffn_part(p, x1, cfg)
+        x1, _ = _apply_ffn_part(p, x1, cfg, layer)
         return x1, st
     if kind == "mlstm":
         return X.mlstm_apply(p["mlstm"], x1, cfg.xlstm_cfg(), cache)
@@ -246,8 +255,18 @@ def block_decode(p: Params, x1, cfg: ArchConfig, kind: str, cache: Params):
 # ---------------------------------------------------------------------------
 
 def _unit_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    if cfg.ffn_kinds is not None:
+        # per-layer FFN variants have per-layer param SHAPES: nothing to
+        # jnp.stack into scan units, so every layer runs on the unscanned
+        # "extra" path (ArchConfig validation pins scan_layers=False)
+        return 0, cfg.n_layers
     u = len(cfg.pattern)
     return cfg.n_layers // u, cfg.n_layers % u
+
+
+def _block_kind(cfg: ArchConfig, i: int) -> str:
+    """Block kind of absolute layer ``i`` (pattern tiles past one unit)."""
+    return cfg.pattern[i % len(cfg.pattern)]
 
 
 def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
@@ -267,8 +286,10 @@ def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
     units = [one_unit(unit_keys[i]) for i in range(n_units)]
     if units:
         p["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    off = n_units * len(cfg.pattern)
     rem_keys = jax.random.split(keys[2], max(rem, 1))
-    p["extra"] = [block_init(rem_keys[i], cfg, cfg.pattern[i], cross=cross)
+    p["extra"] = [block_init(rem_keys[i], cfg, _block_kind(cfg, off + i),
+                             cross=cross, layer=off + i)
                   for i in range(rem)]
     p["final_norm"] = _norm_init(cfg, dtype)
     if not cfg.tied_embeddings:
@@ -331,6 +352,7 @@ def forward(
     *,
     frames: Optional[jax.Array] = None,      # (B, T_audio, d) audio stub
     patches: Optional[jax.Array] = None,     # (B, n_img, d) vision stub
+    ffn_taps: Optional[Dict[int, jax.Array]] = None,  # calibration capture
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (final hidden (B, S_total, d), aux_loss)."""
     x = _embed_in(params, cfg, tokens)
@@ -367,9 +389,12 @@ def forward(
             for i in range(n_units):
                 up = jax.tree.map(lambda a: a[i], params["units"])
                 (x, aux), _ = body((x, aux), up)
+    n_units, _ = _unit_counts(cfg)
+    off = n_units * len(cfg.pattern)
     for i, bp in enumerate(params["extra"]):
-        x, a = block_apply(bp, x, cfg, cfg.pattern[i],
-                           prefix_len=prefix_len, memory=memory)
+        x, a = block_apply(bp, x, cfg, _block_kind(cfg, off + i),
+                           prefix_len=prefix_len, memory=memory,
+                           layer=off + i, taps=ffn_taps)
         aux = aux + a
     return _norm(cfg, params["final_norm"], x), aux
 
@@ -434,8 +459,9 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> Params:
     if n_units:
         us = [one_unit() for _ in range(n_units)]
         caches["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *us)
+    off = n_units * len(cfg.pattern)
     caches["extra"] = [
-        block_init_cache(batch, max_len, cfg, cfg.pattern[i],
+        block_init_cache(batch, max_len, cfg, _block_kind(cfg, off + i),
                          cross_len=cross_len) for i in range(rem)]
     return caches
 
@@ -490,9 +516,12 @@ def prefill(
             caches["units"] = jax.tree.map(
                 lambda *xs: jnp.stack(xs), *per_unit)
     caches["extra"] = []
+    n_units, _ = _unit_counts(cfg)
+    off = n_units * len(cfg.pattern)
     for i, bp in enumerate(params["extra"]):
-        x, c = block_prefill(bp, x, cfg, cfg.pattern[i], max_len,
-                             prefix_len=prefix_len, memory=memory)
+        x, c = block_prefill(bp, x, cfg, _block_kind(cfg, off + i), max_len,
+                             prefix_len=prefix_len, memory=memory,
+                             layer=off + i)
         caches["extra"].append(c)
     h = _norm(cfg, params["final_norm"], x)
     return _logits(params, cfg, h[:, -1:]), caches
@@ -531,8 +560,11 @@ def decode_step(
             new_caches["units"] = jax.tree.map(
                 lambda *xs: jnp.stack(xs), *per_unit)
     new_caches["extra"] = []
+    n_units, _ = _unit_counts(cfg)
+    off = n_units * len(cfg.pattern)
     for i, bp in enumerate(params["extra"]):
-        x, c = block_decode(bp, x, cfg, cfg.pattern[i], caches["extra"][i])
+        x, c = block_decode(bp, x, cfg, _block_kind(cfg, off + i),
+                            caches["extra"][i], layer=off + i)
         new_caches["extra"].append(c)
     h = _norm(cfg, params["final_norm"], x)
     return _logits(params, cfg, h), new_caches

@@ -46,8 +46,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.engine import VikinHW, serving_report
-from repro.core.modes import ExecMode, ModePlan
+from repro.core.engine import (
+    LayerWork,
+    VikinHW,
+    run_model,
+    serving_report,
+)
+from repro.core.modes import RECONFIG_CYCLES, ExecMode, LayerKind, ModePlan
 from repro.utils import next_pow2 as _next_pow2
 
 
@@ -142,15 +147,95 @@ class ModelBackend:
 # ---------------------------------------------------------------------------
 
 
-class TransformerBackend(ModelBackend):
-    """Slot KV-cache decode for ArchConfig transformer stacks."""
+def transformer_layer_works(cfg) -> List[LayerWork]:
+    """Per-phase VIKIN LayerWorks for a kan-ffn transformer arch.
 
-    def __init__(self, cfg, params):
+    The mode-plan phase mapping of DESIGN.md Sec. 17: every block's
+    attention projections are one parallel-mode (MLP) work item, a "kan"
+    FFN is a pipeline-mode KAN up-projection (stage-1 basis sparsity)
+    followed by a parallel-mode down matmul (stage-2 hidden sparsity), and
+    an "mlp" FFN is its two parallel-mode matmuls -- so KAN-FFN phases
+    charge pipeline-mode cycles and everything else stays parallel.
+    """
+    works: List[LayerWork] = []
+    hd = cfg.hd
+    attn_out = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.d_model
+    for i in range(cfg.n_layers):
+        block = cfg.pattern[i % len(cfg.pattern)]
+        if block == "attn":
+            works.append(LayerWork(LayerKind.MLP, cfg.d_model, attn_out))
+        else:
+            # recurrent/xlstm blocks: their gate/proj matmuls are
+            # parallel-mode work of roughly d_model x d_model
+            works.append(LayerWork(LayerKind.MLP, cfg.d_model, cfg.d_model))
+        fk = cfg.layer_ffn_kind(i)
+        if fk == "kan":
+            fcfg = cfg.ffn_cfg(i)
+            up = fcfg.kanffn_up_cfg()
+            h = fcfg.kanffn_hidden
+            s1 = 1.0 - up.n_bases_kept / up.spec.n_bases
+            hm = fcfg.kanffn_hidden_mask()
+            s2 = 0.0 if hm is None else float(hm.sparsity)
+            works.append(LayerWork(LayerKind.KAN, cfg.d_model, h,
+                                   spec=up.spec, pattern_rate=s1))
+            works.append(LayerWork(LayerKind.MLP, h, cfg.d_model,
+                                   pattern_rate=s2))
+        elif fk == "mlp" and cfg.d_ff > 0:
+            gated = cfg.ffn_kind in ("swiglu", "geglu")
+            up_out = 2 * cfg.d_ff if gated else cfg.d_ff
+            works.append(LayerWork(LayerKind.MLP, cfg.d_model, up_out))
+            works.append(LayerWork(LayerKind.MLP, cfg.d_ff, cfg.d_model))
+        elif fk == "moe":
+            # top_k expert FFNs' worth of parallel-mode work per token
+            k = max(cfg.top_k, 1)
+            works.append(LayerWork(LayerKind.MLP, cfg.d_model,
+                                   2 * k * cfg.d_ff))
+            works.append(LayerWork(LayerKind.MLP, k * cfg.d_ff, cfg.d_model))
+    return works
+
+
+class TransformerBackend(ModelBackend):
+    """Slot KV-cache decode for ArchConfig transformer stacks.
+
+    ``impl`` / ``masks`` / ``precision`` mirror VikinBackend's plumbing for
+    kan-ffn archs (cfg.ffn_kinds set): ``impl`` selects the kernel dispatch
+    of every kan-ffn layer, ``masks`` installs calibrated per-layer
+    (basis_keep, hidden_keep) pairs (core/calibrate.calibrate_kanffn_masks),
+    and ``precision`` picks f32 or bf16 serving (params cast once here).
+    Such archs also gain the VIKIN cycle model: a per-layer ModePlan
+    (attention/down phases parallel, KAN up-projections pipeline) charged
+    through ``batch_report`` with the cross-tick mode carry-over contract,
+    counting one model instance per decoded token plus one per prefilled
+    prompt token.  Plain archs keep batch_report() -> None.
+    """
+
+    def __init__(self, cfg, params, *, impl: Optional[str] = None,
+                 masks=None, precision: str = "f32",
+                 hw: Optional[VikinHW] = None):
         import jax
 
         from repro.models import transformer as T
 
+        if precision not in ("f32", "bf16"):
+            raise ValueError(
+                f"TransformerBackend serves f32|bf16, got {precision!r} "
+                "(int8 transformer serving is not supported; the vikin "
+                "backends own the quantized path)")
+        if masks is not None:
+            cfg = dataclasses.replace(cfg, ffn_masks=tuple(masks))
+        if impl is not None and cfg.ffn_kinds is not None:
+            cfg = dataclasses.replace(cfg, ffn_impl=impl)
+        if precision == "bf16":
+            import jax.numpy as jnp
+
+            if cfg.dtype != "bfloat16":
+                cfg = dataclasses.replace(cfg, dtype="bfloat16")
+            params = jax.tree.map(
+                lambda a: (a.astype(jnp.bfloat16)
+                           if jnp.issubdtype(a.dtype, jnp.floating) else a),
+                params)
         self.cfg, self.params = cfg, params
+        self.precision = precision
         self._T, self._jax = T, jax
         self._decode = jax.jit(
             lambda p, tok, c: T.decode_step(p, cfg, tok, c))
@@ -158,6 +243,14 @@ class TransformerBackend(ModelBackend):
         # caches carry the true per-request position (the per-row 'len').
         self._prefill_cache = {}
         self.n_slots = self.max_len = None
+        self.hw = hw or VikinHW()
+        self.plan = self.layers = None
+        if cfg.ffn_kinds is not None:
+            self.layers = transformer_layer_works(cfg)
+            self.plan = ModePlan.for_layers([w.kind for w in self.layers])
+        self._pending_prefill = 0
+        self._report_cache: Dict[Tuple[int, int, Optional[ExecMode]],
+                                 Dict[str, float]] = {}
 
     def init_state(self, n_slots: int, max_len: int):
         self.n_slots, self.max_len = n_slots, max_len
@@ -180,6 +273,10 @@ class TransformerBackend(ModelBackend):
 
         jax, T = self._jax, self._T
         tokens = np.asarray(req.prompt, np.int32)[None, :]
+        if self.layers is not None:
+            # each prefilled prompt token is one model instance the cycle
+            # model must charge on the NEXT tick's report
+            self._pending_prefill += tokens.shape[1]
         logits, cache = self._prefill_fn(tokens.shape[1])(
             self.params, jnp.asarray(tokens))
         next_tok = int(jax.device_get(T.greedy_token(logits))[0, 0])
@@ -216,6 +313,48 @@ class TransformerBackend(ModelBackend):
                     or (req.eos_id is not None and tok == req.eos_id)):
                 req.done = True
         return caches
+
+    def batch_report(self, n_active: int,
+                     prev_mode: Optional[ExecMode] = None,
+                     ) -> Optional[Dict[str, float]]:
+        """VIKIN cycle model for the tick just run (kan-ffn archs only).
+
+        ``batch`` = one model instance per active decode slot plus one per
+        prompt token prefilled since the last report; ``prev_mode`` is the
+        carried interconnect state (DESIGN.md Sec. 14) and ``exit_mode``
+        hands the closing state back to the engine.  Plain archs (no
+        ffn_kinds) return None -- no hardware model.
+        """
+        if self.layers is None:
+            return None
+        pending, self._pending_prefill = self._pending_prefill, 0
+        batch = n_active + pending
+        if batch <= 0:
+            return None
+        key = (n_active, pending, prev_mode)
+        if key not in self._report_cache:
+            self._report_cache[key] = serving_report(
+                self.layers, self.hw, batch=batch,
+                prev_mode=prev_mode, precision=self.precision)
+        return dict(self._report_cache[key])
+
+    def cycle_attribution(self, batch: int,
+                          prev_mode: Optional[ExecMode] = None,
+                          ) -> Dict[str, object]:
+        """Per-layer-phase cycle split whose parts sum EXACTLY to the
+        serving report's sim_cycles at the same (batch, prev_mode):
+        sum(per_layer_cycles) + reconfig_cycles == sim_cycles
+        (test-pinned: tests/test_kanffn_serving.py)."""
+        if self.layers is None:
+            raise ValueError("cycle_attribution needs a kan-ffn arch "
+                             "(cfg.ffn_kinds set)")
+        rep = run_model(self.layers, self.hw, batch=batch)
+        switches, _ = self.plan.stream_switches(batch, prev_mode)
+        return {
+            "per_layer_cycles": [float(lc.total * batch)
+                                 for lc in rep.per_layer],
+            "reconfig_cycles": float(switches * RECONFIG_CYCLES),
+        }
 
 
 # ---------------------------------------------------------------------------

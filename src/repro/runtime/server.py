@@ -434,12 +434,19 @@ class Engine:
 
 
 class Server(Engine):
-    """Back-compat transformer server: Engine over a TransformerBackend."""
+    """Back-compat transformer server: Engine over a TransformerBackend.
 
-    def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256):
-        super().__init__(TransformerBackend(cfg, params), n_slots=n_slots,
-                         max_len=max_len)
-        self.cfg, self.params = cfg, params
+    ``impl`` / ``masks`` / ``precision`` pass through to the backend for
+    kan-ffn archs (kernel dispatch, calibrated two-stage masks, f32|bf16
+    serving); the defaults serve plain archs unchanged."""
+
+    def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256,
+                 impl=None, masks=None, precision: str = "f32"):
+        super().__init__(
+            TransformerBackend(cfg, params, impl=impl, masks=masks,
+                               precision=precision),
+            n_slots=n_slots, max_len=max_len)
+        self.cfg, self.params = self.backend.cfg, self.backend.params
 
     @property
     def caches(self):

@@ -1,0 +1,151 @@
+"""Differential harness for the KAN-FFN transformer layer (DESIGN.md Sec. 17).
+
+Pins the contract that lets kan-ffn archs serve through the fused VIKIN
+kernels without a numerics escape hatch:
+
+  * ``kan_ffn_apply`` jnp-oracle == pallas-interpret BITWISE, across dtypes
+    (f32 / bf16), mask subsets (dense, stage-1 basis mask only, both
+    stages), and padded power-of-two bucket shapes -- the forced blocks in
+    kan_ffn_apply keep the contraction a single k-tile, which is the
+    bitwise regime the kernel suite pins.
+  * decode == prefill: the FFN block is position-independent, so token-by-
+    token application is bitwise identical to the full-sequence pass; the
+    whole kan-ffn model is greedy-token-exact between cached decode and
+    re-prefilling the growing sequence.
+
+A deterministic parametrized grid guarantees the (dtype x stage x shape)
+coverage in every environment; the hypothesis sweep on top fuzzes shapes
+and mask draws, skipping cleanly without hypothesis
+(tests/_hypothesis_fallback.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import HAVE_HYPOTHESIS, hypothesis, st
+from repro.models.ffn import FFNConfig, ffn_init, kan_ffn_apply
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+STAGES = ("dense", "stage1", "both")
+
+if HAVE_HYPOTHESIS:
+    hyp_settings = hypothesis.settings(max_examples=20, deadline=None)
+else:
+    hyp_settings = hypothesis.settings()
+
+
+def _masks_for(stage: str, cfg: FFNConfig, rng: np.random.Generator):
+    """Draw a (basis_keep, hidden_keep) pair for the requested stage set."""
+    basis_keep = hidden_keep = None
+    n_bases = cfg.kanffn_up_cfg().spec.n_bases
+    if stage in ("stage1", "both"):
+        k = max(1, n_bases // 2)
+        basis_keep = tuple(sorted(
+            int(i) for i in rng.choice(n_bases, size=k, replace=False)))
+    if stage == "both":
+        h = cfg.kanffn_hidden
+        k = max(1, h // 2)
+        hidden_keep = tuple(sorted(
+            int(i) for i in rng.choice(h, size=k, replace=False)))
+    return basis_keep, hidden_keep
+
+
+def _cfg(d_model: int, d_ff: int, impl: str, stage: str,
+         seed: int) -> FFNConfig:
+    base = FFNConfig(d_model=d_model, d_ff=d_ff, kind="kanffn",
+                     kan_impl=impl)
+    bk, hk = _masks_for(stage, base, np.random.default_rng(seed))
+    return FFNConfig(d_model=d_model, d_ff=d_ff, kind="kanffn",
+                     kan_impl=impl, basis_keep=bk, hidden_keep=hk)
+
+
+def _run_pair(batch: int, d_model: int, d_ff: int, dtype: str, stage: str,
+              seed: int):
+    jdt = DTYPES[dtype]
+    cfg_jnp = _cfg(d_model, d_ff, "jnp", stage, seed)
+    cfg_int = _cfg(d_model, d_ff, "pallas_interpret", stage, seed)
+    params = ffn_init(jax.random.key(seed), cfg_jnp, dtype=jdt)
+    x = jnp.asarray(
+        np.random.default_rng(seed + 1).normal(size=(batch, d_model)),
+        jdt)
+    y_jnp = np.asarray(jax.device_get(kan_ffn_apply(params, x, cfg_jnp)))
+    y_int = np.asarray(jax.device_get(kan_ffn_apply(params, x, cfg_int)))
+    return y_jnp, y_int
+
+
+# power-of-two bucket shapes the serving engine pads into (utils.next_pow2)
+GRID = [(1, 8, 32), (2, 16, 32), (4, 16, 64), (8, 32, 64)]
+
+
+@pytest.mark.parametrize("dtype", sorted(DTYPES))
+@pytest.mark.parametrize("stage", STAGES)
+@pytest.mark.parametrize("batch,d_model,d_ff", GRID)
+def test_jnp_matches_interpret_bitwise(batch, d_model, d_ff, dtype, stage):
+    y_jnp, y_int = _run_pair(batch, d_model, d_ff, dtype, stage, seed=0)
+    assert y_jnp.dtype == y_int.dtype
+    assert np.array_equal(y_jnp, y_int), (
+        f"kan_ffn_apply jnp vs pallas_interpret diverged bitwise "
+        f"(max |d|={np.max(np.abs(y_jnp.astype(np.float64) - y_int.astype(np.float64)))})")
+
+
+@hyp_settings
+@hypothesis.given(batch=st.sampled_from([1, 2, 4, 8, 16]),
+                  d_model=st.sampled_from([8, 16, 32]),
+                  d_ff=st.sampled_from([32, 64]),
+                  dtype=st.sampled_from(sorted(DTYPES)),
+                  stage=st.sampled_from(STAGES),
+                  seed=st.integers(min_value=0, max_value=99))
+def test_jnp_matches_interpret_bitwise_fuzz(batch, d_model, d_ff, dtype,
+                                            stage, seed):
+    y_jnp, y_int = _run_pair(batch, d_model, d_ff, dtype, stage, seed)
+    assert np.array_equal(y_jnp, y_int)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+@pytest.mark.parametrize("stage", STAGES)
+def test_ffn_block_decode_matches_prefill_bitwise(impl, stage):
+    """Token-by-token application == full-sequence pass, bitwise.
+
+    kan_ffn_apply is position-independent (no cross-token state), so the
+    decode path hitting it one token at a time must reproduce the prefill
+    pass exactly -- the FFN-level half of the decode==prefill contract.
+    """
+    cfg = _cfg(16, 32, impl, stage, seed=3)
+    params = ffn_init(jax.random.key(3), cfg, dtype=jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(4).normal(size=(2, 6, 16)), jnp.float32)
+    full = np.asarray(jax.device_get(kan_ffn_apply(params, x, cfg)))
+    step = np.concatenate(
+        [np.asarray(jax.device_get(
+            kan_ffn_apply(params, x[:, t:t + 1], cfg)))
+         for t in range(x.shape[1])], axis=1)
+    assert np.array_equal(full, step)
+
+
+def test_model_decode_matches_prefill_token_exact():
+    """Cached decode through the whole kan-ffn stack reproduces, token by
+    token, what re-prefilling the growing sequence produces (greedy)."""
+    from repro.configs.registry import KANFFN_ARCHS
+    from repro.models import transformer as T
+    from repro.runtime.backends import Request, TransformerBackend
+
+    cfg = KANFFN_ARCHS["kanffn-ci"]
+    params = T.init_params(jax.random.key(0), cfg)
+    backend = TransformerBackend(cfg, params, impl="jnp")
+    prompt = np.array([5, 11, 23, 7], np.int32)
+    req = Request(0, prompt, max_new_tokens=5)
+    state = backend.init_state(1, 32)
+    state = backend.prefill(state, 0, req)
+    while not req.done:
+        state = backend.step(state, [req])
+    assert len(req.generated) == 5
+
+    seq = list(prompt)
+    for tok in req.generated:
+        logits, _ = jax.jit(
+            lambda p, t: T.prefill(p, backend.cfg, t, max_len=32))(
+                backend.params, jnp.asarray([seq], jnp.int32))
+        want = int(jax.device_get(T.greedy_token(logits))[0, 0])
+        assert tok == want, (seq, req.generated)
+        seq.append(tok)

@@ -46,6 +46,35 @@ def test_input_specs_all_cells(arch):
             assert isinstance(leaf, jax.ShapeDtypeStruct)
 
 
+def test_bad_ffn_kinds_raise_named_error_at_construction():
+    """Invalid per-layer kinds fail at config build with ArchConfigError,
+    not as a shape-mismatch crash deep inside block_init (regression:
+    registry.get_serving_config used to hand such configs through)."""
+    import dataclasses
+
+    from repro.configs.base import ArchConfig, ArchConfigError
+    from repro.configs.registry import KANFFN_ARCHS, get_serving_config
+
+    good = KANFFN_ARCHS["kanffn-ci"]
+    with pytest.raises(ArchConfigError, match="unknown ffn_kinds"):
+        dataclasses.replace(good, ffn_kinds=("mlp", "KAN", "mlp"))
+    with pytest.raises(ArchConfigError, match="entries"):
+        dataclasses.replace(good, ffn_kinds=("mlp", "kan"))
+    with pytest.raises(ArchConfigError, match="scan_layers"):
+        dataclasses.replace(good, scan_layers=True)
+    with pytest.raises(ArchConfigError, match="moe"):
+        dataclasses.replace(good, ffn_kinds=("mlp", "moe", "mlp"))
+    with pytest.raises(ArchConfigError, match="ffn_masks"):
+        dataclasses.replace(good, ffn_masks=(None, None))
+    # the registry resolves kan-ffn archs as transformers, and they stay
+    # OUT of the dry-run grid (runnable_cells pin above)
+    fam, cfg = get_serving_config("kanffn-ci")
+    assert fam == "transformer" and cfg.ffn_kinds is not None
+    assert not set(KANFFN_ARCHS) & set(ARCHS)
+    with pytest.raises(KeyError, match="kan-ffn archs"):
+        get_serving_config("no-such-arch")
+
+
 def test_param_sharding_rules_cover_paths():
     """Every parameter gets a sharding; attn/ffn kernels get model axes."""
     cfg = get_config("qwen2-0.5b")
