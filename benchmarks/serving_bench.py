@@ -31,7 +31,13 @@ With more than one visible device (or ``--devices N`` under
 additionally emits ``sharded:*`` rows (DESIGN.md Sec. 13): the same burst
 served single-device and data-parallel over N devices
 (runtime/sharded.ShardedVikinBackend), with a bitwise output-identity check
-and the single-chip vs multi-chip VikinArray cycle profiles side by side.
+and the single-chip vs multi-chip VikinArray cycle profiles side by side --
+plus the other two array plans (DESIGN.md Sec. 18): a ``pipe:*`` row
+pinning the data-vs-pipeline cycle crossover over a batch sweep (with the
+fill/drain bubble checked against its closed-form bound) and a
+``hetero:*`` row where mode-pinned chips drive reconfiguration cycles to
+0 on the interleaved KAN/MLP stream without added batching delay.  Every
+plan's served outputs stay bitwise identical to single-device serving.
 
 Usage: PYTHONPATH=src python -m benchmarks.serving_bench [--requests N]
 """
@@ -211,6 +217,186 @@ def sharded_single_vs_multi(arch: str, *, devices: int, n_requests: int = 32,
         "multi": multi,
         "array_cycle_speedup": (single["sim_cycles_per_req"]
                                 / max(multi["sim_cycles_per_req"], 1e-9)),
+    }
+
+
+def pipeline_vs_data(arch: str = "vikin-small", *, devices: int,
+                     n_requests: int = 32, n_slots: int = 8,
+                     impl: str = "auto", seed: int = 0) -> Dict:
+    """The ``pipe:*`` row: data-plan vs pipeline-plan over the same chips.
+
+    Two halves (DESIGN.md Sec. 18).  The ANALYTICAL half sweeps batch
+    sizes through the cycle model for both plans on ``devices`` chips and
+    pins the crossover: pipeline pays DMA setup per STAGE instead of per
+    chip (and zero flips when its stages are mode-homogeneous), so it wins
+    at small batch; the data plan's rows/chips compute split wins past the
+    crossover batch.  The fill/drain bubble is pinned against its
+    closed-form bound ``(n_stages - 1) * T_max``.  All analytical fields
+    are count-independent, so they gate exactly in check_regression.  The
+    SERVED half runs the same burst through the engine single-device and
+    pipeline-staged and records the bitwise output-identity flag (gated)
+    plus measured per-request figures (informational: their batch split
+    depends on the request count).
+    """
+    from repro.core.engine import VikinArray, VikinHW, serving_report
+    from repro.runtime.sharded import PipelineVikinBackend
+
+    model = VIKIN_ARCHS[arch]
+    params = vikin_stack_init(jax.random.key(seed), model)
+    hw = VikinHW()
+    layers = model.layer_works()
+    data_arr = VikinArray(hw=hw, n_chips=devices)
+    pipe_arr = VikinArray(hw=hw, n_chips=devices, plan="pipeline")
+    n_stages = len(pipe_arr.stage_sizes(len(layers)))
+
+    sweep = []
+    crossover = None
+    for b in (1, 2, 4, 8, 16, 32, 64):
+        d = serving_report(layers, hw, batch=b, array=data_arr)
+        p = serving_report(layers, hw, batch=b, array=pipe_arr)
+        sweep.append({
+            "batch": b,
+            "data_cycles": d["sim_cycles"],
+            "pipeline_cycles": p["sim_cycles"],
+            "pipeline_over_data": p["sim_cycles"] / d["sim_cycles"],
+        })
+        if crossover is None and d["sim_cycles"] <= p["sim_cycles"]:
+            crossover = b
+    p1 = serving_report(layers, hw, batch=1, array=pipe_arr)
+    d8 = serving_report(layers, hw, batch=8, array=data_arr)
+    p8 = serving_report(layers, hw, batch=8, array=pipe_arr)
+    # batch=1: chip_cycles == sum(T_s) and bubble == sum(T_s) - T_max,
+    # so T_max falls out and the closed-form bound is checkable here
+    t_max = p1["chip_cycles"] - p1["bubble_cycles"]
+    bound = (n_stages - 1) * t_max
+
+    rng = np.random.default_rng(seed)
+    reqs = [rng.random(model.sizes[0], dtype=np.float32)
+            for _ in range(n_requests)]
+
+    def serve(backend):
+        eng = Engine(backend, n_slots=n_slots)
+        rids = [eng.submit(r) for r in reqs]
+        out = eng.run_until_done()
+        s = eng.stats
+        row = {
+            "sim_cycles_per_req": s["sim_cycles"] / max(s["served"], 1),
+            "reconfig_cycles": s["reconfig_cycles"],
+            "wall_rps": s["served"] / s["wall_s"] if s["wall_s"] else 0.0,
+        }
+        for k in ("chip_cycles", "comm_cycles", "bubble_cycles"):
+            if k in s:
+                row[f"{k}_per_req"] = s[k] / max(s["served"], 1)
+        return np.stack([out[r] for r in rids]), row
+
+    y1, single = serve(VikinBackend(model, params, impl=impl))
+    yp, pipe = serve(PipelineVikinBackend(model, params, impl=impl,
+                                          devices=devices))
+    return {
+        "arch": arch,
+        "devices": devices,
+        "requests": n_requests,
+        "n_stages": n_stages,
+        "stage_sizes": list(pipe_arr.stage_sizes(len(layers))),
+        "bitwise_identical": bool(np.array_equal(y1, yp)),
+        "single": single,
+        "pipeline": pipe,
+        "sweep": sweep,
+        "crossover_batch": crossover,
+        "pipeline_wins_at_batch_1": bool(
+            sweep[0]["pipeline_cycles"] < sweep[0]["data_cycles"]),
+        "bubble_cycles": p1["bubble_cycles"],
+        "bubble_bound_cycles": bound,
+        "bubble_within_bound": bool(p1["bubble_cycles"] <= bound + 1e-9),
+        "data_reconfig_cycles_per_req": d8["reconfig_cycles"] / 8.0,
+        "pipeline_reconfig_cycles_per_req": p8["reconfig_cycles"] / 8.0,
+    }
+
+
+def _default_pins(devices: int):
+    from repro.core.engine import VikinArray, VikinHW
+    return VikinArray(hw=VikinHW(), n_chips=devices,
+                      plan="hetero").resolved_pins()
+
+
+def hetero_vs_affinity(archs=("vikin-kan2", "vikin-mlp3"), *,
+                       devices: int, n_requests: int = 32, n_slots: int = 8,
+                       impl: str = "auto", seed: int = 0) -> Dict:
+    """The ``hetero:*`` row: chip-pinned array vs single-chip mode grouping.
+
+    Same adversarially interleaved KAN/MLP stream as the ``sched:*`` row,
+    two servings: (a) the PR 5 baseline -- ONE reconfigurable chip per
+    workload under the mode-affinity policy, which amortizes flips by
+    batching same-mode work (committed reconfig total: 8 cycles, the one
+    surviving flip); (b) a ``devices``-chip HETERO array per workload --
+    chips pinned per mode, so the scheduler (told via
+    ``SchedContext.pinned_modes``) stops grouping and NO flip ever
+    happens: reconfig is identically 0 AND queue wait does not grow
+    (no_added_batching_delay gates on the sim clock).  Outputs stay
+    bitwise identical to single-request single-device serving under both.
+    """
+    from repro.runtime.backends import MultiWorkloadBackend
+    from repro.runtime.sharded import HeteroVikinBackend
+
+    models = {a: VIKIN_ARCHS[a] for a in archs}
+    params = {a: vikin_stack_init(jax.random.key(seed), m)
+              for a, m in models.items()}
+    rng = np.random.default_rng(seed)
+    stream = [(archs[i % len(archs)],
+               rng.random(models[archs[i % len(archs)]].sizes[0],
+                          dtype=np.float32))
+              for i in range(n_requests)]
+
+    singles: Dict[int, np.ndarray] = {}
+    for a in archs:
+        eng = Engine(VikinBackend(models[a], params[a], impl=impl),
+                     n_slots=n_slots)
+        for i, (arch, x) in enumerate(stream):
+            if arch != a:
+                continue
+            rid = eng.submit(x)
+            singles[i] = eng.run_until_done()[rid]
+
+    def serve(make_backend):
+        backend = MultiWorkloadBackend(
+            {a: make_backend(a) for a in archs})
+        eng = Engine(backend, n_slots=n_slots, policy="mode-affinity")
+        rids = [eng.submit(x, workload=a) for a, x in stream]
+        out = eng.run_until_done()
+        bitwise = all(np.array_equal(out[rid], singles[i])
+                      for i, rid in enumerate(rids))
+        s = eng.stats
+        return {
+            "requests": int(s["served"]),
+            "batches": int(s["ticks"]),
+            "bitwise_identical_to_single": bool(bitwise),
+            "sim_cycles_per_req": s["sim_cycles"] / max(s["served"], 1),
+            "reconfig_cycles": s["reconfig_cycles"],
+            "mode_switches": int(s["mode_switches"]),
+            "p95_queue_wait_sim_s": s.get("p95_queue_wait_sim_s", 0.0),
+        }
+
+    affinity = serve(
+        lambda a: VikinBackend(models[a], params[a], impl=impl))
+    hetero = serve(
+        lambda a: HeteroVikinBackend(models[a], params[a], impl=impl,
+                                     devices=devices))
+    return {
+        "archs": list(archs),
+        "requests": n_requests,
+        "n_slots": n_slots,
+        "devices": devices,
+        "mode_pins": [m.value for m in _default_pins(devices)],
+        "affinity_single_chip": affinity,
+        "hetero_pinned": hetero,
+        "bitwise_identical": (
+            affinity["bitwise_identical_to_single"]
+            and hetero["bitwise_identical_to_single"]),
+        "no_added_batching_delay": bool(
+            hetero["p95_queue_wait_sim_s"]
+            <= affinity["p95_queue_wait_sim_s"] + 1e-12),
+        "reconfig_cycles_affinity": affinity["reconfig_cycles"],
+        "reconfig_cycles_hetero": hetero["reconfig_cycles"],
     }
 
 
@@ -462,6 +648,11 @@ def run(n_requests: int = 32, n_slots: int = 8,
             prev = json.load(f)
     except (OSError, ValueError):
         prev = {}
+    if devices > 1:
+        # fail HERE with the fix, not with a shape mismatch deep inside
+        # shard_map once the first sharded row builds its mesh
+        from repro.launch.mesh import require_devices
+        require_devices(devices, "serving_bench --devices")
     results = {a: serve_burst(a, n_requests=n_requests, n_slots=n_slots)
                for a in archs}
     sched_archs = ("vikin-kan2", "vikin-mlp3")
@@ -473,17 +664,24 @@ def run(n_requests: int = 32, n_slots: int = 8,
         for a in sharded_archs:
             results[f"sharded:{a}"] = sharded_single_vs_multi(
                 a, devices=devices, n_requests=n_requests, n_slots=n_slots)
+        prow = pipeline_vs_data(devices=devices, n_requests=n_requests,
+                                n_slots=n_slots)
+        results[f"pipe:{prow['arch']}"] = prow
+        hrow = hetero_vs_affinity(devices=devices, n_requests=n_requests,
+                                  n_slots=n_slots)
+        results[f"hetero:{'+'.join(hrow['archs'])}"] = hrow
     else:
-        # 1-device run: carry the existing sharded rows forward verbatim
+        # 1-device run: carry the existing multi-chip rows forward verbatim
         # instead of deleting them from the tracked baseline (the bitwise
         # gate only re-measures where multiple devices are visible -- CI
         # forces 4 host devices; check_regression fails if the rows ever
         # disappear from the committed artifact)
-        carried = {k: v for k, v in prev.items() if k.startswith("sharded:")}
+        carried = {k: v for k, v in prev.items()
+                   if k.startswith(("sharded:", "pipe:", "hetero:"))}
         if carried:
             print(f"[serving_bench] 1 device visible: carrying "
-                  f"{len(carried)} committed sharded:* row(s) forward "
-                  f"un-re-measured; set "
+                  f"{len(carried)} committed sharded:/pipe:/hetero: "
+                  f"row(s) forward un-re-measured; set "
                   f"XLA_FLAGS=--xla_force_host_platform_device_count=4 "
                   f"to refresh them")
             results.update(carried)
@@ -552,6 +750,26 @@ def main() -> None:
                   f"{r['multi']['sim_cycles_per_req']:.0f} cyc/req "
                   f"({r['array_cycle_speedup']:.2f}x, "
                   f"comm {r['multi']['comm_cycles_per_req']:.0f} cyc/req)")
+            continue
+        if a.startswith("pipe:"):
+            s1 = r["sweep"][0]
+            print(f"{a}: {r['devices']} chips / {r['n_stages']} stages, "
+                  f"bitwise_identical={r['bitwise_identical']}; batch 1: "
+                  f"data {s1['data_cycles']:.0f} -> pipeline "
+                  f"{s1['pipeline_cycles']:.0f} cyc, crossover at batch "
+                  f"{r['crossover_batch']}, bubble "
+                  f"{r['bubble_cycles']:.0f} <= bound "
+                  f"{r['bubble_bound_cycles']:.0f}, reconfig/req "
+                  f"{r['data_reconfig_cycles_per_req']:.0f} -> "
+                  f"{r['pipeline_reconfig_cycles_per_req']:.0f}")
+            continue
+        if a.startswith("hetero:"):
+            print(f"{a}: {r['devices']} chips pinned {r['mode_pins']}, "
+                  f"bitwise_identical={r['bitwise_identical']}; reconfig "
+                  f"{r['reconfig_cycles_affinity']:.0f} cyc (affinity, 1 "
+                  f"chip) -> {r['reconfig_cycles_hetero']:.0f} cyc "
+                  f"(hetero), no_added_batching_delay="
+                  f"{r['no_added_batching_delay']}")
             continue
         if a.startswith("openloop:"):
             # loadgen_bench's rows, carried forward verbatim; it prints

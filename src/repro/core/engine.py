@@ -33,9 +33,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
-from repro.core.modes import RECONFIG_CYCLES, LayerKind, ModePlan
+from repro.core.modes import (
+    RECONFIG_CYCLES,
+    ExecMode,
+    LayerKind,
+    ModePlan,
+    parse_mode,
+)
 from repro.core.splines import SplineSpec, spu_op_count
 
 # Bytes per element on the wire, by served precision.  The DMA/byte model
@@ -317,6 +323,25 @@ class VikinArray:
     Cycle attribution stays per-row on the chips: every row still pays its
     mode plan on whichever chip serves it, so mode_switches / reconfig
     totals are array-size independent.
+
+    ``plan`` selects how the layer stack maps onto the chips
+    (DESIGN.md Sec. 18):
+
+    * ``"data"`` (default, the PR 4 model above): params replicated, request
+      rows split across chips, every chip runs the whole stack and flips
+      modes with its row stream.
+    * ``"pipeline"``: the stack is cut into contiguous layer stages
+      (``stage_map``, or an even split over ``min(n_chips, n_layers)``
+      chips), one stage per chip; rows stream through the stages with
+      micro-batch overlap, so steady-state wall time is set by the slowest
+      stage and the fill/drain bubble is the sum of the OTHER stages.
+      Inter-stage activations cross the shared host port.
+    * ``"hetero"``: every chip is PINNED to one interconnect mode
+      (``mode_pins``; default splits the array half pipeline-mode /
+      half parallel-mode).  Each same-mode run of layers row-splits over
+      the pool pinned to its mode, so NO chip ever reconfigures --
+      reconfig_cycles is identically 0 -- at the cost of each segment
+      only using its pool's chips.
     """
 
     hw: VikinHW = VikinHW()
@@ -327,6 +352,9 @@ class VikinArray:
     # Derived from ``precision`` when None (was a hard-coded FP16 "2" while
     # serving actually ran f32); an explicit int still overrides.
     bytes_per_feat: Optional[int] = None
+    plan: str = "data"                   # data | pipeline | hetero
+    stage_map: Optional[Tuple[int, ...]] = None   # pipeline: layers per stage
+    mode_pins: Optional[Tuple[ExecMode, ...]] = None  # hetero: mode per chip
 
     def __post_init__(self):
         if self.n_chips < 1:
@@ -334,6 +362,36 @@ class VikinArray:
         if self.bytes_per_feat is None:
             object.__setattr__(self, "bytes_per_feat",
                                precision_bytes(self.precision))
+        if self.plan not in ("data", "pipeline", "hetero"):
+            raise ValueError(
+                f"unknown array plan {self.plan!r}; expected one of "
+                "'data', 'pipeline', 'hetero'")
+        if self.stage_map is not None:
+            if self.plan != "pipeline":
+                raise ValueError(
+                    f"stage_map is a pipeline-plan knob; array plan is "
+                    f"{self.plan!r}")
+            sm = tuple(int(n) for n in self.stage_map)
+            if not sm or any(n < 1 for n in sm):
+                raise ValueError(
+                    f"stage_map entries must be positive layer counts, got "
+                    f"{self.stage_map!r}")
+            if len(sm) > self.n_chips:
+                raise ValueError(
+                    f"stage_map asks for {len(sm)} stages but the array has "
+                    f"only {self.n_chips} chips (one stage per chip)")
+            object.__setattr__(self, "stage_map", sm)
+        if self.mode_pins is not None:
+            if self.plan != "hetero":
+                raise ValueError(
+                    f"mode_pins is a hetero-plan knob; array plan is "
+                    f"{self.plan!r}")
+            pins = tuple(parse_mode(m) for m in self.mode_pins)
+            if len(pins) != self.n_chips:
+                raise ValueError(
+                    f"mode_pins must pin every chip: got {len(pins)} pins "
+                    f"for {self.n_chips} chips")
+            object.__setattr__(self, "mode_pins", pins)
 
     def rows_per_chip(self, batch: int) -> int:
         return math.ceil(max(batch, 1) / self.n_chips)
@@ -343,6 +401,35 @@ class VikinArray:
         xfer_bytes = max(batch, 1) * (n_in + n_out) * self.bytes_per_feat
         return (xfer_bytes / self.host_bytes_per_cycle
                 + 2.0 * self.n_chips * self.dma_setup_cycles)
+
+    def stage_sizes(self, n_layers: int) -> Tuple[int, ...]:
+        """Pipeline plan: layers per stage (explicit stage_map, or an even
+        cut of the stack over ``min(n_chips, n_layers)`` stages)."""
+        if n_layers < 1:
+            raise ValueError("stage_sizes needs at least one layer")
+        if self.stage_map is not None:
+            if sum(self.stage_map) != n_layers:
+                raise ValueError(
+                    f"stage_map {self.stage_map!r} covers "
+                    f"{sum(self.stage_map)} layers but the stack has "
+                    f"{n_layers}")
+            return self.stage_map
+        n_stages = min(self.n_chips, n_layers)
+        base, rem = divmod(n_layers, n_stages)
+        return tuple(base + (1 if s < rem else 0) for s in range(n_stages))
+
+    def resolved_pins(self) -> Tuple[ExecMode, ...]:
+        """Hetero plan: per-chip pinned mode.  Default pins the first
+        ``ceil(n_chips/2)`` chips pipeline-mode (KAN) and the rest
+        parallel-mode (MLP)."""
+        if self.mode_pins is not None:
+            return self.mode_pins
+        n_pipe = math.ceil(self.n_chips / 2)
+        return (ExecMode.PIPELINE,) * n_pipe + (
+            ExecMode.PARALLEL,) * (self.n_chips - n_pipe)
+
+    def pool_size(self, mode: ExecMode) -> int:
+        return sum(1 for m in self.resolved_pins() if m is mode)
 
 
 def serving_report(
@@ -378,6 +465,29 @@ def serving_report(
     breakdown.  Mode-switch TOTALS stay per-row-stream attribution (every
     row pays its plan; flip totals are chip-count independent, test-pinned)
     while the wall clock charges each chip its own row stream's flips.
+    That is the ``"data"`` plan; ``array.plan`` selects two alternatives
+    (DESIGN.md Sec. 18):
+
+    * ``"pipeline"``: layers staged across chips, rows overlapped through
+      the stages.  Wall compute is ``(batch-1) * T_max + sum(T_s)`` where
+      ``T_s`` is stage ``s``'s one-row time (+ a steady-state re-entry flip
+      when its own layer run is mode-mixed), i.e. steady-state issue at the
+      bottleneck stage plus the fill/drain bubble
+      ``bubble_cycles = sum(T_s) - T_max <= (n_stages-1) * T_max``
+      (equality when stages are balanced -- the closed-form bound pinned in
+      tests/test_array_plans.py).  The host port carries the input and
+      output rows PLUS every inter-stage activation boundary, but DMA setup
+      is paid per STAGE, not per chip -- which is why pipeline beats the
+      data plan at small batch on deep-enough stacks and loses past the
+      crossover batch where the data plan's ``rows/chips`` compute split
+      dominates.  Per-chip interconnects never see other stages' modes, so
+      there is no cross-batch carry (no ``exit_mode``).
+    * ``"hetero"``: chips pinned to one mode each (``array.mode_pins``);
+      each same-mode layer segment row-splits over its mode's pool.  No
+      interconnect EVER flips: ``mode_switches`` / ``reconfig_cycles`` are
+      identically 0 regardless of the stream mix or ``prev_mode``, and
+      there is no ``exit_mode`` to carry.  Raises if the stack needs a mode
+      no chip is pinned to.
 
     ``precision`` is the dtype SERVED (what the runtime actually streams:
     "f32" for the plain path, "int8" for the quantized one); it sets the
@@ -389,10 +499,25 @@ def serving_report(
     """
     plan = ModePlan.for_layers([w.kind for w in layers])
     batch = max(batch, 1)
-    switches, exit_mode = plan.stream_switches(batch, prev_mode)
     ebytes = precision_bytes(precision)
     dma_bytes = (batch * (layers[0].n_in + layers[-1].n_out) * ebytes
                  + sum(w.streamed_params() for w in layers) * ebytes)
+    if array is not None:
+        if array.hw != hw:
+            raise ValueError(
+                "serving_report: array.hw disagrees with the hw argument; "
+                "build the VikinArray with the chip model you are reporting "
+                "against (the array's hw is what the chips run)")
+        if array.precision != precision:
+            raise ValueError(
+                f"serving_report: array precision {array.precision!r} "
+                f"disagrees with the served precision {precision!r}; build "
+                "the VikinArray with the dtype actually on the wire")
+        if array.plan == "pipeline":
+            return _pipeline_report(layers, plan, array, batch, dma_bytes)
+        if array.plan == "hetero":
+            return _hetero_report(layers, plan, array, batch, dma_bytes)
+    switches, exit_mode = plan.stream_switches(batch, prev_mode)
     out = {
         "mode_switches": float(switches),
         "reconfig_cycles": float(switches * RECONFIG_CYCLES),
@@ -408,16 +533,6 @@ def serving_report(
         out.update(sim_cycles=cycles, sim_latency_s=cycles / hw.clock_hz,
                    sim_macs=rep.macs)
         return out
-    if array.hw != hw:
-        raise ValueError(
-            "serving_report: array.hw disagrees with the hw argument; "
-            "build the VikinArray with the chip model you are reporting "
-            "against (the array's hw is what the chips run)")
-    if array.precision != precision:
-        raise ValueError(
-            f"serving_report: array precision {array.precision!r} disagrees "
-            f"with the served precision {precision!r}; build the VikinArray "
-            "with the dtype actually on the wire")
     rows = array.rows_per_chip(batch)
     chip = run_model(layers, array.hw, batch=rows)
     # wall clock: the slowest chip replays ``rows`` back-to-back instances,
@@ -438,6 +553,125 @@ def serving_report(
         comm_cycles=comm,
     )
     return out
+
+
+def _pipeline_report(
+    layers: Sequence[LayerWork],
+    plan: ModePlan,
+    array: VikinArray,
+    batch: int,
+    dma_bytes: float,
+) -> dict:
+    """Pipeline-parallel array accounting (DESIGN.md Sec. 18).
+
+    Stage ``s`` holds a contiguous layer run; one row costs it ``T_s``
+    cycles (its layers' run_model time, plus one steady-state re-entry
+    flip when the stage itself is mode-mixed -- its interconnect must
+    return to the stage's first mode before the next row).  Rows overlap
+    through the stages, so the bottleneck stage issues a row every
+    ``T_max`` and the ends of the pipe add the fill/drain bubble:
+
+        compute wall = (batch - 1) * T_max + sum(T_s)
+        bubble_cycles = sum(T_s) - T_max
+
+    All activation traffic shares the one host port: every row crosses it
+    entering stage 0, at each of the ``n_stages - 1`` stage boundaries,
+    and leaving the last stage.  DMA setup is paid per stage-endpoint
+    (``2 * n_stages``), NOT per chip -- with fewer stages than chips this
+    is exactly the fixed-cost edge over the data plan at small batch.
+    """
+    sizes = array.stage_sizes(len(layers))
+    stages: List[Sequence[LayerWork]] = []
+    lo = 0
+    for n in sizes:
+        stages.append(layers[lo:lo + n])
+        lo += n
+    stage_times: List[float] = []
+    macs_row = 0.0
+    switches = 0
+    for stage in stages:
+        splan = ModePlan.for_layers([w.kind for w in stage])
+        rep = run_model(stage, array.hw, batch=1)
+        t = float(rep.cycles)
+        if splan.last_mode is not splan.first_mode:
+            t += RECONFIG_CYCLES  # re-enter the stage's first mode per row
+        stage_times.append(t)
+        macs_row += rep.macs
+        # steady state: every stage re-runs its own plan per row, carrying
+        # its OWN last mode (stages never see neighbours' interconnects)
+        switches += splan.stream_switches(batch, splan.last_mode)[0]
+    t_max = max(stage_times)
+    bubble = sum(stage_times) - t_max
+    chip_cycles = (batch - 1) * t_max + sum(stage_times)
+    feats = (layers[0].n_in
+             + sum(stage[-1].n_out for stage in stages[:-1])
+             + layers[-1].n_out)
+    comm = (batch * feats * array.bytes_per_feat / array.host_bytes_per_cycle
+            + 2.0 * len(stages) * array.dma_setup_cycles)
+    cycles = chip_cycles + comm
+    return {
+        "mode_switches": float(switches),
+        "reconfig_cycles": float(switches * RECONFIG_CYCLES),
+        "dma_bytes": float(dma_bytes),
+        "sim_cycles": cycles,
+        "sim_latency_s": cycles / array.hw.clock_hz,
+        "sim_macs": macs_row * batch,
+        "chip_cycles": chip_cycles,
+        "comm_cycles": comm,
+        "bubble_cycles": bubble,
+    }
+
+
+def _hetero_report(
+    layers: Sequence[LayerWork],
+    plan: ModePlan,
+    array: VikinArray,
+    batch: int,
+    dma_bytes: float,
+) -> dict:
+    """Heterogeneous mode-pinned array accounting (DESIGN.md Sec. 18).
+
+    Each maximal same-mode layer segment row-splits over the chip pool
+    pinned to its mode (data-parallel within the pool); segments run in
+    sequence, activations crossing the host port between pools.  Chips
+    never reconfigure -- a pipeline-pinned chip only ever sees KAN
+    segments -- so flip totals are identically zero whatever the stream
+    mix, which is the whole point of the plan (the scheduler stops
+    needing to group batches by mode, runtime/scheduler.py).
+    """
+    pins = array.resolved_pins()
+    chip_cycles = 0.0
+    macs_row = 0.0
+    endpoints = 0
+    for mode, lo, hi in plan.segment_slices():
+        pool = sum(1 for m in pins if m is mode)
+        if pool == 0:
+            raise ValueError(
+                f"hetero array has no chip pinned to {mode.value!r} but the "
+                f"stack needs it (pins: {[m.value for m in pins]}); pin at "
+                "least one chip per mode the workload uses")
+        rows = math.ceil(batch / pool)
+        rep = run_model(layers[lo:hi], array.hw, batch=rows)
+        chip_cycles += float(rep.cycles)
+        macs_row += rep.macs / rows
+        endpoints += pool
+    seg_slices = plan.segment_slices()
+    feats = (layers[0].n_in
+             + sum(layers[hi - 1].n_out for _, _, hi in seg_slices[:-1])
+             + layers[-1].n_out)
+    comm = (batch * feats * array.bytes_per_feat / array.host_bytes_per_cycle
+            + 2.0 * endpoints * array.dma_setup_cycles)
+    cycles = chip_cycles + comm
+    return {
+        "mode_switches": 0.0,
+        "reconfig_cycles": 0.0,
+        "dma_bytes": float(dma_bytes),
+        "sim_cycles": cycles,
+        "sim_latency_s": cycles / array.hw.clock_hz,
+        "sim_macs": macs_row * batch,
+        "chip_cycles": chip_cycles,
+        "comm_cycles": comm,
+    }
 
 
 # ---------------------------------------------------------------------------

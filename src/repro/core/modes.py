@@ -48,6 +48,23 @@ class LayerKind(enum.Enum):
 
 MODE_FOR_KIND = {LayerKind.KAN: ExecMode.PIPELINE, LayerKind.MLP: ExecMode.PARALLEL}
 
+
+def parse_mode(mode) -> ExecMode:
+    """Coerce a mode spelling (ExecMode | "pipeline"/"kan" | "parallel"/"mlp")
+    into an ExecMode, for CLI flags and array mode-pin configs."""
+    if isinstance(mode, ExecMode):
+        return mode
+    name = str(mode).strip().lower()
+    aliases = {
+        "pipeline": ExecMode.PIPELINE, "kan": ExecMode.PIPELINE,
+        "parallel": ExecMode.PARALLEL, "mlp": ExecMode.PARALLEL,
+    }
+    if name not in aliases:
+        raise ValueError(
+            f"unknown exec mode {mode!r}; expected one of "
+            f"{sorted(aliases)} (pipeline=KAN dataflow, parallel=MLP)")
+    return aliases[name]
+
 # Interconnect reconfiguration cost, cycles (buffer drain + mux switch).
 # Charged by the cycle model on every mode flip; "minimal reconfiguration
 # overhead" per paper Sec. IV-A.
@@ -114,6 +131,21 @@ class ModePlan:
                 out[-1] = (m, out[-1][1] + 1)
             else:
                 out.append((m, 1))
+        return out
+
+    def segment_slices(self) -> List[Tuple[ExecMode, int, int]]:
+        """Like :meth:`segments` but with layer index ranges:
+        [(mode, start, stop), ...] with ``stop`` exclusive.  This is the
+        layer->chip-pool assignment unit of the heterogeneous array plan
+        (core/engine.serving_report, DESIGN.md Sec. 18): each maximal
+        same-mode run of layers executes on the chip pool pinned to that
+        mode, so segment boundaries are exactly where activations cross
+        between pools."""
+        out: List[Tuple[ExecMode, int, int]] = []
+        start = 0
+        for mode, n in self.segments():
+            out.append((mode, start, start + n))
+            start += n
         return out
 
     def summary(self) -> dict:

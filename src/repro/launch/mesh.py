@@ -46,6 +46,24 @@ def serving_mesh(n_devices: int):
     return jax.sharding.Mesh(np.asarray(avail[:n_devices]), ("data",))
 
 
+def require_devices(n: int, context: str = "") -> list:
+    """Validate that ``n`` local devices are visible BEFORE any sharded /
+    staged computation is built, so a short device count fails with the
+    fix (the XLA host-device flag) instead of a shape-mismatch deep in
+    shard_map.  Returns the first ``n`` devices."""
+    avail = jax.devices()
+    if n < 1:
+        raise ValueError(f"need at least 1 device, got request for {n}")
+    if n > len(avail):
+        where = f" ({context})" if context else ""
+        raise ValueError(
+            f"{n} devices requested{where} but only {len(avail)} visible; "
+            f"on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before the process starts")
+    return list(avail[:n])
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     """Axes that carry batch parallelism on this mesh."""
     names = mesh.axis_names

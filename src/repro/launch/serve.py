@@ -32,15 +32,20 @@ trained sparse model instead of random-init weights:
   PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
       --ckpt /tmp/vikin_ckpt --requests 8 --impl pallas_interpret
 
-``--devices N`` serves the workload data-parallel over N devices
-(runtime/sharded.ShardedVikinBackend): replicated params, per-device
-request buckets, and the multi-chip VikinArray cycle model (DESIGN.md
-Sec. 13).  Served outputs are bitwise identical to ``--devices 1``.  On
-CPU, force the device count before jax initializes:
+``--devices N`` serves the workload over an N-chip array; ``--array-plan``
+picks how the stack maps onto the chips (DESIGN.md Sec. 13 + 18):
+``data`` (default) splits request rows with replicated params
+(runtime/sharded.ShardedVikinBackend), ``pipeline`` stages the layer
+stack across chips (``--stage-map 2,1`` = layers per stage), ``hetero``
+pins each chip to one interconnect mode (``--stage-map kan,kan,mlp,mlp``)
+so reconfiguration cycles drop to 0.  Served outputs are bitwise
+identical to ``--devices 1`` under EVERY plan.  On CPU, force the device
+count before jax initializes:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.serve --arch vikin-small \
-      --devices 4 --requests 8 --impl pallas_interpret
+      --devices 4 --array-plan pipeline --requests 8 \
+      --impl pallas_interpret
 
 ``--trace`` replays a seeded arrival trace (runtime/loadgen.py) OPEN-loop
 on the simulated clock -- arrivals land on the trace's schedule whether or
@@ -57,6 +62,34 @@ not the engine keeps up -- with ``--max-queue``/``--admission``/
 from __future__ import annotations
 
 import argparse
+
+
+def _split_stage_map(args):
+    return [t.strip() for t in (args.stage_map or "").split(",")
+            if t.strip()]
+
+
+def _parse_stage_map(args):
+    """--stage-map under --array-plan pipeline: layers per stage, e.g.
+    '2,1' puts the first two layers on chip 0 and the last on chip 1."""
+    toks = _split_stage_map(args)
+    if args.array_plan != "pipeline" or not toks:
+        return None
+    try:
+        return [int(t) for t in toks]
+    except ValueError:
+        raise SystemExit(
+            f"--stage-map {args.stage_map!r}: the pipeline plan takes a "
+            f"comma list of per-stage layer counts (e.g. 2,1)")
+
+
+def _parse_mode_pins(args):
+    """--stage-map under --array-plan hetero: one mode name per chip,
+    e.g. 'kan,kan,mlp,mlp' (aliases: pipeline=kan, parallel=mlp)."""
+    toks = _split_stage_map(args)
+    if args.array_plan != "hetero" or not toks:
+        return None
+    return toks
 
 
 def _make_vikin_backend(args, model):
@@ -109,15 +142,29 @@ def _make_vikin_backend(args, model):
         print(f"no checkpoint: calibrated int8 scales from a synthetic "
               f"batch (x={scales.summary()['x']})")
     if args.devices > 1:
-        from repro.runtime.sharded import ShardedVikinBackend
-        backend = ShardedVikinBackend(model, params, impl=args.impl,
-                                      masks=masks, devices=args.devices,
-                                      precision=args.precision,
-                                      scales=scales)
-        print(f"sharded serving: {args.devices} devices "
-              f"({backend.mesh.devices.ravel()[0].platform}), "
-              f"per-shard bucket >= {backend.shard_bucket(args.slots)} "
-              f"at full occupancy")
+        from repro.runtime.sharded import make_array_backend
+        try:
+            backend = make_array_backend(
+                model, params, impl=args.impl, masks=masks,
+                devices=args.devices, plan=args.array_plan,
+                stage_map=_parse_stage_map(args),
+                mode_pins=_parse_mode_pins(args),
+                precision=args.precision, scales=scales)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        if args.array_plan == "data":
+            print(f"sharded serving: {args.devices} devices "
+                  f"({backend.mesh.devices.ravel()[0].platform}), "
+                  f"per-shard bucket >= {backend.shard_bucket(args.slots)} "
+                  f"at full occupancy")
+        elif args.array_plan == "pipeline":
+            stages = [(lo, hi) for lo, hi, _ in backend._stage_ranges()]
+            print(f"pipeline serving: {args.devices} chips, "
+                  f"{len(stages)} layer stages {stages}")
+        else:
+            pins = [m.value for m in backend.array.resolved_pins()]
+            print(f"hetero serving: {args.devices} chips pinned {pins} "
+                  f"(reconfig cycles pinned to 0)")
     else:
         backend = VikinBackend(model, params, impl=args.impl, masks=masks,
                                precision=args.precision, scales=scales)
@@ -140,6 +187,15 @@ def _serve_vikin(args, models):
     from repro.runtime.server import Engine
 
     models = [m.reduce() if args.scale == "smoke" else m for m in models]
+    if args.array_plan != "data" and args.devices <= 1:
+        raise SystemExit(
+            f"--array-plan {args.array_plan} needs a multi-chip array; "
+            f"pass --devices N (N > 1) and, on CPU, "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    if args.stage_map and args.array_plan == "data":
+        raise SystemExit(
+            "--stage-map only applies to --array-plan pipeline (layers "
+            "per stage) or hetero (mode pins per chip)")
     multi = len(models) > 1
     if multi and (args.ckpt or args.ckpt_dir):
         raise SystemExit(
@@ -326,9 +382,20 @@ def main():
                          "16); int8 needs the checkpoint's calibrated "
                          "scales and dequantizes into f32 accumulation")
     ap.add_argument("--devices", type=int, default=1,
-                    help="vikin archs: data-parallel serving over N devices "
+                    help="vikin archs: array serving over N devices "
                          "(runtime/sharded; outputs bitwise identical to "
-                         "--devices 1)")
+                         "--devices 1 under every --array-plan)")
+    ap.add_argument("--array-plan", default="data",
+                    choices=["data", "pipeline", "hetero"],
+                    help="how the array maps the stack onto --devices "
+                         "chips (DESIGN.md Sec. 18): data = rows split / "
+                         "params replicated; pipeline = layer stages with "
+                         "micro-batch overlap; hetero = chips pinned per "
+                         "interconnect mode (reconfig cycles -> 0)")
+    ap.add_argument("--stage-map", default=None,
+                    help="plan-specific chip map: pipeline takes layers "
+                         "per stage ('2,1'); hetero takes one mode per "
+                         "chip ('kan,kan,mlp,mlp')")
     ap.add_argument("--trace", default=None,
                     help="vikin archs: replay this arrival-trace JSON "
                          "(python -m repro.runtime.loadgen) OPEN-loop on "
@@ -370,6 +437,10 @@ def main():
                 f"--devices is vikin-only (runtime/sharded); serving "
                 f"{args.arch!r} would silently run single-device. Drop "
                 f"the flag or serve a vikin-* workload")
+        if args.array_plan != "data" or args.stage_map:
+            raise SystemExit(
+                "--array-plan/--stage-map are vikin-only (runtime/"
+                "sharded); serve a vikin-* workload")
         if args.trace:
             raise SystemExit(
                 f"--trace is vikin-only (runtime/loadgen replays on the "

@@ -307,13 +307,32 @@ def vikin_stack_init(key, model, dtype=jnp.float32) -> list:
 
 
 def vikin_stack_apply(params: list, x: jax.Array, model, *,
-                      impl: str = "auto", masks=None) -> jax.Array:
+                      impl: str = "auto", masks=None,
+                      layer_range=None) -> jax.Array:
     """Run the full stack; ``impl`` threads the kernel dispatch through
     every layer (auto | jnp | pallas | pallas_interpret).  ``masks``
     substitutes calibrated per-layer masks for the config-derived tiled
-    ones (see stack_layer_cfgs)."""
+    ones (see stack_layer_cfgs).
+
+    ``layer_range=(lo, hi)`` runs only layers ``lo..hi-1`` (``hi``
+    exclusive) against a matching slice of ``params``; ``x`` must then be
+    layer ``lo``'s input activations.  The layer math is identical to the
+    full-stack call -- staged array backends (runtime/sharded.py) chain
+    slices per chip and still get bitwise-identical outputs.
+    """
+    cfgs = stack_layer_cfgs(model, masks)
+    if layer_range is not None:
+        lo, hi = layer_range
+        if not (0 <= lo < hi <= len(cfgs)):
+            raise ValueError(
+                f"layer_range {layer_range!r} out of bounds for a "
+                f"{len(cfgs)}-layer stack")
+        cfgs = cfgs[lo:hi]
+        # accept the full param list (slice it) or a pre-sliced one
+        if len(params) != len(cfgs):
+            params = params[lo:hi]
     h = x
-    for p, (kind, cfg) in zip(params, stack_layer_cfgs(model, masks)):
+    for p, (kind, cfg) in zip(params, cfgs):
         if kind == "kan":
             h = kan_apply(p, h, dataclasses.replace(cfg, impl=impl))
         else:

@@ -108,6 +108,14 @@ class Request:
 class ModelBackend:
     """Protocol (documented base): the engine calls exactly these four."""
 
+    # Interconnect modes this backend's chips are PINNED to (a frozenset of
+    # ExecMode), or None when the hardware reconfigures with the stream.
+    # Hetero-plan array backends (runtime/sharded.HeteroVikinBackend) set
+    # this; the engine forwards it to the batch policy (SchedContext
+    # .pinned_modes) so mode-affinity grouping relaxes for modes that cost
+    # nothing to enter (DESIGN.md Sec. 18).
+    pinned_modes = None
+
     def init_state(self, n_slots: int, max_len: int):
         raise NotImplementedError
 
@@ -552,6 +560,22 @@ class MultiWorkloadBackend(ModelBackend):
         requests in (scheduler's zero-padding-waste signal)."""
         b = self.backends[workload]
         return b.bucket(n_active) if hasattr(b, "bucket") else n_active
+
+    @property
+    def pinned_modes(self):
+        """Union of the sub-backends' chip pins, but only when EVERY
+        mode-planned sub-backend is pinned (hetero array plan) -- a single
+        reconfiguring sub-backend means flips still cost somewhere, so the
+        scheduler must keep grouping (None)."""
+        pins = set()
+        for name, b in self.backends.items():
+            p = getattr(b, "pinned_modes", None)
+            if p is None:
+                if name in self.plans:
+                    return None
+                continue
+            pins |= set(p)
+        return frozenset(pins) if pins else None
 
     def input_dim(self, workload: Optional[str] = None) -> int:
         """Feature width of the named workload's payloads (trace replay)."""

@@ -63,6 +63,12 @@ class SchedContext:
     ``now`` is the ENGINE clock (wall by default, the simulated trace
     clock under open-loop replay), so deadline decisions stay
     deterministic when the engine is driven by runtime/loadgen.
+    ``pinned_modes`` is the set of ExecModes the backend's chips are
+    PINNED to (hetero array plan, DESIGN.md Sec. 18), or None when the
+    hardware reconfigures with the stream: entering a pinned mode costs
+    zero reconfiguration whatever ``hw_mode`` carries, so mode-affinity
+    grouping has nothing to amortize for those modes and must not delay
+    work to achieve it.
     """
 
     queues: Dict[Optional[str], List[Request]]
@@ -72,6 +78,7 @@ class SchedContext:
     plans: Dict[Optional[str], ModePlan]
     bucket_for: Callable[[Optional[str], int], int]
     max_queue: Optional[int] = None
+    pinned_modes: Optional[frozenset] = None
     now: float = dataclasses.field(default_factory=time.perf_counter)
 
 
@@ -162,8 +169,13 @@ class ModeAffinityPolicy(BatchPolicy):
         k = min(len(q), ctx.free_slots)
         plan = ctx.plans.get(w)
         first = plan.first_mode if plan is not None else None
+        # a workload whose entry mode is chip-PINNED (hetero array plan)
+        # flips nothing regardless of the carried mode -- score it affine
+        # so mode grouping never delays it (DESIGN.md Sec. 18)
         affine = (ctx.hw_mode is None or first is None
-                  or first is ctx.hw_mode)
+                  or first is ctx.hw_mode
+                  or (ctx.pinned_modes is not None
+                      and first in ctx.pinned_modes))
         return (
             any(_overdue(r, ctx.now) for r in q),
             affine,

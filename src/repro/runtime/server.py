@@ -302,6 +302,7 @@ class Engine:
                              if r is not None),
             hw_mode=self.hw_mode, plans=self._plans(),
             bucket_for=self._bucket_for, max_queue=self.max_queue,
+            pinned_modes=getattr(self.backend, "pinned_modes", None),
             now=self.clock())
         picked = self.policy.select(ctx)
         for req, slot in zip(picked, free):

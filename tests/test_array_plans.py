@@ -1,0 +1,422 @@
+"""Array execution plans: pipeline-parallel + hetero mode pinning
+(core/engine serving_report plans, runtime/sharded staged backends,
+runtime/scheduler pinned-mode affinity; DESIGN.md Sec. 18).
+
+Four legs:
+
+  * MODEL: data-plan per-row mode totals stay chip-count independent;
+    pipeline fill/drain bubble matches the closed form
+    ``sum(T_s) - T_max`` with equality against the
+    ``(n_stages - 1) * T_max`` bound on balanced stages; pipeline beats
+    data at batch 1 (per-stage vs per-chip DMA setup) and loses past the
+    crossover; hetero reconfiguration is identically zero whatever the
+    carried mode.
+  * VALIDATION: stage_map / mode_pins knobs reject wrong plans, wrong
+    sizes and unknown modes with errors naming the fix.
+  * SCHEDULER: ``SchedContext.pinned_modes`` makes mode-affinity score a
+    pinned-mode workload affine even against a disagreeing carried mode.
+  * OUTPUTS: pipeline- and hetero-staged serving is bitwise identical to
+    single-device serving on 4 forced host devices (subprocess, jnp and
+    pallas_interpret).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs.vikin_models import VIKIN_ARCHS
+from repro.core.engine import (
+    RECONFIG_CYCLES,
+    LayerWork,
+    VikinArray,
+    mlp_layers,
+    run_model,
+    serving_report,
+)
+from repro.core.modes import ExecMode, LayerKind, ModePlan, parse_mode
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _layers(arch="vikin-mixed"):
+    return VIKIN_ARCHS[arch].layer_works()
+
+
+# ---------------------------------------------------------------------------
+# Data plan: per-row attribution is array-size independent.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batch", [1, 5, 12])
+def test_data_plan_row_totals_chip_count_independent(batch):
+    """Every row pays its own mode plan on whichever chip serves it, so
+    flip/reconfig totals never depend on how many chips exist."""
+    layers = _layers()
+    base = serving_report(layers, batch=batch)
+    plan = ModePlan.for_layers([w.kind for w in layers])
+    expect = plan.stream_switches(batch, None)[0] * RECONFIG_CYCLES
+    assert base["reconfig_cycles"] == expect
+    for chips in (1, 2, 3, 4, 8):
+        rep = serving_report(layers, batch=batch,
+                             array=VikinArray(n_chips=chips))
+        assert rep["mode_switches"] == base["mode_switches"]
+        assert rep["reconfig_cycles"] == base["reconfig_cycles"]
+        assert rep["dma_bytes"] == base["dma_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Pipeline plan: bubble closed form, stage accounting, crossover direction.
+# ---------------------------------------------------------------------------
+
+
+def _pipe(layers, batch, chips=4, stage_map=None):
+    return serving_report(
+        layers, batch=batch,
+        array=VikinArray(n_chips=chips, plan="pipeline",
+                         stage_map=stage_map))
+
+
+def test_pipeline_balanced_stages_hit_the_closed_form_bound():
+    """Identical layers -> identical stage times -> the fill/drain bubble
+    EQUALS (n_stages - 1) * stage_time, the closed-form bound."""
+    layers = mlp_layers([32, 32, 32, 32, 32])          # 4 identical stages
+    t = run_model(layers[:1]).cycles                   # one stage, one row
+    for batch in (1, 3, 8):
+        rep = _pipe(layers, batch)
+        assert rep["bubble_cycles"] == pytest.approx((4 - 1) * t)
+        assert rep["chip_cycles"] == pytest.approx(
+            (batch - 1) * t + 4 * t)
+        assert rep["sim_cycles"] == pytest.approx(
+            rep["chip_cycles"] + rep["comm_cycles"])
+
+
+def test_pipeline_bubble_matches_stage_times_and_bound():
+    """General stacks: bubble == sum(T_s) - T_max <= (S-1) * T_max, with
+    T_s computed independently from run_model per stage."""
+    layers = _layers()
+    arr = VikinArray(n_chips=4, plan="pipeline")
+    sizes = arr.stage_sizes(len(layers))
+    times, lo = [], 0
+    for n in sizes:
+        stage = layers[lo:lo + n]
+        lo += n
+        t = run_model(stage).cycles
+        splan = ModePlan.for_layers([w.kind for w in stage])
+        if splan.last_mode is not splan.first_mode:
+            t += RECONFIG_CYCLES
+        times.append(t)
+    rep = serving_report(layers, batch=6, array=arr)
+    t_max = max(times)
+    assert rep["bubble_cycles"] == pytest.approx(sum(times) - t_max)
+    assert rep["bubble_cycles"] <= (len(sizes) - 1) * t_max
+    assert rep["chip_cycles"] == pytest.approx(5 * t_max + sum(times))
+
+
+def test_pipeline_beats_data_at_batch_one_and_loses_at_scale():
+    """The per-STAGE DMA setup (vs per-chip) wins small batches; the data
+    plan's rows/chips compute split wins big ones -- the crossover the
+    pipe:* bench row pins."""
+    layers = _layers("vikin-small")
+    chips = 4
+    data1 = serving_report(layers, batch=1,
+                           array=VikinArray(n_chips=chips))
+    pipe1 = _pipe(layers, 1, chips)
+    assert pipe1["sim_cycles"] < data1["sim_cycles"]
+    data64 = serving_report(layers, batch=64,
+                            array=VikinArray(n_chips=chips))
+    pipe64 = _pipe(layers, 64, chips)
+    assert data64["sim_cycles"] < pipe64["sim_cycles"]
+
+
+def test_pipeline_homogeneous_stages_never_reconfigure():
+    """vikin-small cuts into one MLP stage + one KAN stage: each stage's
+    interconnect holds one mode forever, so the pipeline plan reports zero
+    flips while the data plan flips per row."""
+    layers = _layers("vikin-small")
+    pipe = _pipe(layers, 8)
+    assert pipe["mode_switches"] == 0
+    assert pipe["reconfig_cycles"] == 0
+    data = serving_report(layers, batch=8, array=VikinArray(n_chips=4))
+    assert data["reconfig_cycles"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Hetero plan: reconfiguration is identically zero.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prev", [None, ExecMode.PIPELINE, ExecMode.PARALLEL])
+@pytest.mark.parametrize("batch", [1, 7, 32])
+def test_hetero_reconfig_is_identically_zero(prev, batch):
+    layers = _layers()                                 # mode-mixed stack
+    rep = serving_report(layers, batch=batch, prev_mode=prev,
+                         array=VikinArray(n_chips=4, plan="hetero"))
+    assert rep["mode_switches"] == 0.0
+    assert rep["reconfig_cycles"] == 0.0
+    assert "exit_mode" not in rep                      # nothing to carry
+    # the single-chip engine pays real flips on the same stack
+    single = serving_report(layers, batch=batch, prev_mode=prev)
+    assert single["reconfig_cycles"] > 0
+
+
+def test_hetero_missing_pool_raises():
+    layers = _layers()                                 # needs both modes
+    arr = VikinArray(n_chips=2, plan="hetero",
+                     mode_pins=("parallel", "parallel"))
+    with pytest.raises(ValueError, match="no chip pinned to 'pipeline'"):
+        serving_report(layers, batch=4, array=arr)
+
+
+def test_hetero_segments_row_split_over_their_pool():
+    """Each same-mode segment's compute is run_model at ceil(batch/pool)
+    rows; pools of different sizes split differently."""
+    layers = _layers()
+    arr = VikinArray(n_chips=4, plan="hetero",
+                     mode_pins=("pipeline", "parallel", "parallel",
+                                "parallel"))
+    plan = ModePlan.for_layers([w.kind for w in layers])
+    batch = 9
+    expect = 0.0
+    for mode, lo, hi in plan.segment_slices():
+        pool = arr.pool_size(mode)
+        rows = -(-batch // pool)
+        expect += run_model(layers[lo:hi], batch=rows).cycles
+    rep = serving_report(layers, batch=batch, array=arr)
+    assert rep["chip_cycles"] == pytest.approx(expect)
+    assert rep["sim_cycles"] == pytest.approx(
+        rep["chip_cycles"] + rep["comm_cycles"])
+
+
+# ---------------------------------------------------------------------------
+# Validation: the knobs reject wrong plans / sizes / modes.
+# ---------------------------------------------------------------------------
+
+
+def test_stage_map_rejected_outside_pipeline_plan():
+    with pytest.raises(ValueError, match="pipeline-plan knob"):
+        VikinArray(n_chips=4, plan="data", stage_map=(1, 1))
+
+
+def test_stage_map_more_stages_than_chips():
+    with pytest.raises(ValueError, match="one stage per chip"):
+        VikinArray(n_chips=2, plan="pipeline", stage_map=(1, 1, 1))
+
+
+def test_stage_map_must_cover_the_stack():
+    arr = VikinArray(n_chips=4, plan="pipeline", stage_map=(2, 1))
+    with pytest.raises(ValueError, match="covers 3 layers"):
+        arr.stage_sizes(4)
+
+
+def test_stage_map_entries_must_be_positive():
+    with pytest.raises(ValueError, match="positive layer counts"):
+        VikinArray(n_chips=4, plan="pipeline", stage_map=(2, 0))
+
+
+def test_mode_pins_rejected_outside_hetero_plan():
+    with pytest.raises(ValueError, match="hetero-plan knob"):
+        VikinArray(n_chips=2, plan="pipeline",
+                   mode_pins=("kan", "mlp"))
+
+
+def test_mode_pins_must_pin_every_chip():
+    with pytest.raises(ValueError, match="pin every chip"):
+        VikinArray(n_chips=4, plan="hetero", mode_pins=("kan", "mlp"))
+
+
+def test_parse_mode_accepts_aliases_and_rejects_unknown():
+    assert parse_mode("kan") is ExecMode.PIPELINE
+    assert parse_mode("mlp") is ExecMode.PARALLEL
+    assert parse_mode("pipeline") is ExecMode.PIPELINE
+    assert parse_mode(ExecMode.PARALLEL) is ExecMode.PARALLEL
+    with pytest.raises(ValueError, match="unknown exec mode"):
+        parse_mode("systolic")
+
+
+def test_unknown_plan_rejected():
+    with pytest.raises(ValueError, match="unknown array plan"):
+        VikinArray(n_chips=2, plan="ring")
+
+
+def test_default_pins_split_the_array():
+    arr = VikinArray(n_chips=5, plan="hetero")
+    pins = arr.resolved_pins()
+    assert pins == (ExecMode.PIPELINE,) * 3 + (ExecMode.PARALLEL,) * 2
+    assert arr.pool_size(ExecMode.PIPELINE) == 3
+    assert arr.pool_size(ExecMode.PARALLEL) == 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: pinned modes score affine against any carried mode.
+# ---------------------------------------------------------------------------
+
+
+def _sched_ctx(hw_mode, pinned):
+    from repro.runtime.backends import Request
+    from repro.runtime.scheduler import SchedContext
+
+    kan_plan = ModePlan.for_layers([LayerKind.KAN])
+    mlp_plan = ModePlan.for_layers([LayerKind.MLP])
+    queues = {
+        "kan": [Request(rid=0, prompt=np.zeros(4, np.float32),
+                        workload="kan")],
+        "mlp": [Request(rid=1, prompt=np.zeros(4, np.float32),
+                        workload="mlp")],
+    }
+    return SchedContext(
+        queues=queues, free_slots=4, active=frozenset(),
+        hw_mode=hw_mode, plans={"kan": kan_plan, "mlp": mlp_plan},
+        bucket_for=lambda w, k: k, pinned_modes=pinned, now=0.0)
+
+
+def test_pinned_modes_neutralize_mode_affinity():
+    """Carried mode PARALLEL: without pins the KAN workload scores
+    non-affine (entry flip); with both modes pinned it scores affine --
+    arrival order decides, so the earlier KAN request wins."""
+    from repro.runtime.scheduler import ModeAffinityPolicy
+
+    pol = ModeAffinityPolicy()
+    ctx = _sched_ctx(ExecMode.PARALLEL, None)
+    assert pol._score("kan", ctx)[1] is False
+    assert pol._score("mlp", ctx)[1] is True
+    assert [r.workload for r in pol.select(ctx)] == ["mlp"]
+
+    pinned = frozenset({ExecMode.PIPELINE, ExecMode.PARALLEL})
+    ctx = _sched_ctx(ExecMode.PARALLEL, pinned)
+    assert pol._score("kan", ctx)[1] is True
+    assert pol._score("mlp", ctx)[1] is True
+    assert [r.workload for r in pol.select(ctx)] == ["kan"]
+
+
+def test_partial_pins_only_cover_the_pinned_mode():
+    from repro.runtime.scheduler import ModeAffinityPolicy
+
+    pol = ModeAffinityPolicy()
+    ctx = _sched_ctx(ExecMode.PARALLEL, frozenset({ExecMode.PARALLEL}))
+    assert pol._score("kan", ctx)[1] is False
+    assert pol._score("mlp", ctx)[1] is True
+
+
+# ---------------------------------------------------------------------------
+# Staged backends on the current process's devices (no forcing needed).
+# ---------------------------------------------------------------------------
+
+
+def test_staged_backends_reject_int8():
+    import jax
+
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.sharded import make_array_backend
+
+    model = VIKIN_ARCHS["vikin-small"]
+    params = vikin_stack_init(jax.random.key(0), model)
+    for plan in ("pipeline", "hetero"):
+        with pytest.raises(ValueError, match="f32/bf16 only"):
+            make_array_backend(model, params, devices=1, plan=plan,
+                               precision="int8",
+                               scales=[(1.0, 1.0)] * len(model.kinds))
+
+
+def test_make_array_backend_rejects_mismatched_knobs():
+    import jax
+
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.sharded import make_array_backend
+
+    model = VIKIN_ARCHS["vikin-small"]
+    params = vikin_stack_init(jax.random.key(0), model)
+    with pytest.raises(ValueError, match="pipeline/hetero"):
+        make_array_backend(model, params, devices=1, plan="data",
+                           stage_map=(1, 1))
+    with pytest.raises(ValueError, match="unknown array plan"):
+        make_array_backend(model, params, devices=1, plan="torus")
+
+
+def test_hetero_backend_rejects_uncovered_mode():
+    import jax
+
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.sharded import HeteroVikinBackend
+
+    model = VIKIN_ARCHS["vikin-small"]          # mlp -> kan: needs both
+    params = vikin_stack_init(jax.random.key(0), model)
+    with pytest.raises(ValueError, match="no chip pinned to"):
+        HeteroVikinBackend(model, params, devices=1, impl="jnp",
+                           mode_pins=("kan",))
+
+
+# ---------------------------------------------------------------------------
+# Multi-device bitwise identity: forced host devices -> subprocess.
+# ---------------------------------------------------------------------------
+
+ARRAY_SERVE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys, json
+    sys.path.insert(0, "src")
+    import numpy as np, jax
+    from repro.configs.vikin_models import VIKIN_ARCHS
+    from repro.models.ffn import vikin_stack_init
+    from repro.runtime.backends import VikinBackend
+    from repro.runtime.sharded import (HeteroVikinBackend,
+                                       PipelineVikinBackend)
+    from repro.runtime.server import Engine
+
+    impl = sys.argv[1]
+    model = VIKIN_ARCHS["vikin-small"]
+    params = vikin_stack_init(jax.random.key(0), model)
+    rng = np.random.default_rng(0)
+    reqs = [rng.random(model.sizes[0], dtype=np.float32) for _ in range(10)]
+
+    def serve(backend, slots=8):
+        eng = Engine(backend, n_slots=slots)
+        rids = [eng.submit(r) for r in reqs]
+        out = eng.run_until_done()
+        return np.stack([out[r] for r in rids]), dict(eng.stats)
+
+    y1, s1 = serve(VikinBackend(model, params, impl=impl))
+    yp, sp = serve(PipelineVikinBackend(model, params, impl=impl,
+                                        devices=4))
+    hb = HeteroVikinBackend(model, params, impl=impl, devices=4)
+    yh, sh = serve(hb)
+    ym, sm = serve(PipelineVikinBackend(model, params, impl=impl,
+                                        devices=4, stage_map=[1, 1]))
+    print(json.dumps({
+        "n_devices": len(jax.devices()),
+        "pipe_bitwise": bool(np.array_equal(y1, yp)),
+        "hetero_bitwise": bool(np.array_equal(y1, yh)),
+        "mapped_bitwise": bool(np.array_equal(y1, ym)),
+        "pipe_reconfig": sp["reconfig_cycles"],
+        "hetero_reconfig": sh["reconfig_cycles"],
+        "single_reconfig": s1["reconfig_cycles"],
+        "pipe_has_bubble": "bubble_cycles" in sp,
+        "pinned_modes": sorted(m.value for m in hb.pinned_modes),
+    }))
+""")
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_array_plans_four_devices_bitwise(impl):
+    r = subprocess.run(
+        [sys.executable, "-c", ARRAY_SERVE_SCRIPT, impl],
+        capture_output=True, text=True, cwd=REPO, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["n_devices"] == 4
+    # THE contract: placement never changes served bits
+    assert out["pipe_bitwise"] is True
+    assert out["hetero_bitwise"] is True
+    assert out["mapped_bitwise"] is True
+    # vikin-small's stages are mode-homogeneous -> no pipeline flips;
+    # hetero never flips by construction; single-chip pays real flips
+    assert out["pipe_reconfig"] == 0
+    assert out["hetero_reconfig"] == 0
+    assert out["single_reconfig"] > 0
+    assert out["pipe_has_bubble"] is True
+    # the scheduler contract rides the backend: both modes pinned
+    assert out["pinned_modes"] == ["parallel", "pipeline"]
