@@ -16,7 +16,6 @@ Results append to experiments/hillclimb/<arch>__<shape>__<tag>.json.
 import argparse
 import dataclasses
 import json
-import time
 
 
 def parse_kv(items):
@@ -49,11 +48,9 @@ def main():
     args = ap.parse_args()
 
     from benchmarks.roofline import analyze
-    from repro.configs.base import SHAPES
     from repro.configs.registry import get_config
     from repro.launch.dryrun import analyze_cell, cell_path
-    from repro.launch.mesh import make_production_mesh
-    from repro.launch.steps import StepOptions, lower_cell
+    from repro.launch.steps import StepOptions
     from repro.launch import dryrun as DR
 
     cfg_over = parse_kv(getattr(args, "set"))

@@ -102,7 +102,6 @@ def bench_kan_fused() -> Dict:
             params = jax.tree.map(lambda a: a.astype(dtype), params)
             x = jax.random.normal(jax.random.key(1), (B, n_in), dtype)
             t_flat = flatten_t(params["t"], cfg.kb)
-            kb = cfg.kb or tuple(range(spec.n_bases))
             nbk = cfg.n_bases_kept
             wt = fuse_wt(params["w_b"], t_flat, nbk)
 

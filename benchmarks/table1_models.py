@@ -26,7 +26,6 @@ import numpy as np
 
 from repro.configs.vikin_models import PAPER_MODELS, PaperModelConfig
 from repro.core.kan import KANConfig, kan_apply, kan_init
-from repro.core.splines import SplineSpec
 from repro.data.traffic import TrafficConfig, batches, load_traffic, mae, \
     mse, rse
 from repro.optim import AdamWConfig, adamw_init, adamw_update, \

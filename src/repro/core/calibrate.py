@@ -28,7 +28,8 @@ bit-identical masks (test-pinned: tests/test_pipeline.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING
 
 import jax
 import numpy as np
@@ -39,7 +40,10 @@ from repro.core.sparsity import (
     magnitude_mask,
     weight_saliency,
 )
-from repro.core.splines import bases_dense
+from repro.core.splines import SplineSpec, bases_dense
+
+if TYPE_CHECKING:
+    from repro.core.quant import StackScales
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +74,8 @@ def keep_per_group_for_rate(rate: float) -> int:
     return m
 
 
-def stack_activations(params, model, x: np.ndarray, *,
+def stack_activations(params: Sequence[Dict[str, jax.Array]],
+                      model: Any, x: np.ndarray, *,
                       impl: str = "jnp") -> List[np.ndarray]:
     """Per-layer *input* activations of a dense forward over ``x``.
 
@@ -98,7 +103,8 @@ def stack_activations(params, model, x: np.ndarray, *,
     return acts
 
 
-def kan_basis_saliency(p, spec, x: np.ndarray) -> np.ndarray:
+def kan_basis_saliency(p: Dict[str, jax.Array], spec: SplineSpec,
+                       x: np.ndarray) -> np.ndarray:
     """Wanda-style per-basis saliency: mean |B_i(x)| x L1(t[:, i, :])."""
     xf = np.asarray(x, np.float32)
     b = np.asarray(jax.device_get(
@@ -109,7 +115,8 @@ def kan_basis_saliency(p, spec, x: np.ndarray) -> np.ndarray:
     return act_energy * coeff_mass
 
 
-def mlp_input_saliency(p, x: np.ndarray) -> np.ndarray:
+def mlp_input_saliency(p: Dict[str, jax.Array],
+                       x: np.ndarray) -> np.ndarray:
     """Wanda saliency per input node: RMS activation x fan-out L1."""
     xf = np.asarray(x, np.float32)
     act_rms = np.sqrt(np.mean(xf * xf, axis=0))             # (n_in,)
@@ -117,7 +124,8 @@ def mlp_input_saliency(p, x: np.ndarray) -> np.ndarray:
     return act_rms * weight_saliency(w)                     # (n_in,)
 
 
-def calibrate_stack(params, model, calib_x: np.ndarray, *,
+def calibrate_stack(params: Sequence[Dict[str, jax.Array]],
+                    model: Any, calib_x: np.ndarray, *,
                     keep_per_group: int = 2,
                     impl: str = "jnp") -> StackSparsity:
     """Derive the stack's two-stage masks from a trained model.
@@ -153,7 +161,7 @@ def masked_pattern_rates(masks: Sequence[Optional[PatternMask]]
     return [0.0 if m is None else float(m.sparsity) for m in masks]
 
 
-def calibrate_kanffn_masks(params, cfg, tokens: np.ndarray, *,
+def calibrate_kanffn_masks(params: Any, cfg: Any, tokens: np.ndarray, *,
                            keep_per_group: int = 2,
                            impl: str = "jnp") -> Tuple:
     """Two-stage masks for every "kan" FFN layer of a transformer arch.
@@ -208,8 +216,9 @@ def calibrate_kanffn_masks(params, cfg, tokens: np.ndarray, *,
     return tuple(out)
 
 
-def calibrate_scales(params, model, calib_x: np.ndarray, *,
-                     impl: str = "jnp"):
+def calibrate_scales(params: Sequence[Dict[str, jax.Array]],
+                     model: Any, calib_x: np.ndarray, *,
+                     impl: str = "jnp") -> "StackScales":
     """Derive per-layer symmetric int8 scales from the calibration batch.
 
     Companion to ``calibrate_stack``: the SAME calibration batch that

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.modes import (
     RECONFIG_CYCLES,
@@ -356,7 +356,7 @@ class VikinArray:
     stage_map: Optional[Tuple[int, ...]] = None   # pipeline: layers per stage
     mode_pins: Optional[Tuple[ExecMode, ...]] = None  # hetero: mode per chip
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.n_chips < 1:
             raise ValueError(f"n_chips must be >= 1, got {self.n_chips}")
         if self.bytes_per_feat is None:
@@ -438,7 +438,7 @@ def serving_report(
     *,
     batch: int = 1,
     array: Optional[VikinArray] = None,
-    prev_mode=None,
+    prev_mode: Optional[ExecMode] = None,
     precision: str = "f32",
 ) -> dict:
     """One served batch's simulated-hardware accounting (runtime backends).
@@ -697,7 +697,7 @@ class EdgeGPU:
     precision: str = "f16"             # Table II runs the GPU at FP16
     bytes_per_param: Optional[int] = None   # derived from precision
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.bytes_per_param is None:
             object.__setattr__(self, "bytes_per_param",
                                precision_bytes(self.precision))
@@ -719,7 +719,8 @@ class EdgeGPU:
             )
         return t
 
-    def report(self, layers: Sequence[LayerWork], batch: int = 1):
+    def report(self, layers: Sequence[LayerWork],
+               batch: int = 1) -> Dict[str, float]:
         lat = self.latency_s(layers) * batch
         dense = sum(w.dense_ops() for w in layers) * batch
         gops = dense / lat / 1e9

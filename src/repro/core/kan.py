@@ -16,13 +16,13 @@ retraining from scratch" mechanism (Sec. II-B, Fig. 8).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparsity import GROUP, PatternMask, tiled_mask
+from repro.core.sparsity import PatternMask, tiled_mask
 from repro.core.splines import (
     SplineSpec,
     bases_dense,
@@ -79,7 +79,8 @@ class KANConfig:
         return self.n_in * self.n_out * (1 + self.spec.n_bases)
 
 
-def kan_init(key: jax.Array, cfg: KANConfig, dtype=jnp.float32) -> Params:
+def kan_init(key: jax.Array, cfg: KANConfig,
+             dtype: Any = jnp.float32) -> Params:
     """KAN-paper style init: w_b Kaiming-ish, spline coefficients small."""
     k1, k2 = jax.random.split(key)
     scale_b = 1.0 / np.sqrt(cfg.n_in)
@@ -108,8 +109,9 @@ def kan_fused_weights(params: Params, cfg: KANConfig) -> jax.Array:
 
 
 def kan_stack_apply(
-    params_list, x: jax.Array, cfgs, return_hidden: bool = False
-):
+    params_list: Sequence[Params], x: jax.Array,
+    cfgs: Sequence[KANConfig], return_hidden: bool = False
+) -> Union[jax.Array, Tuple[jax.Array, List[jax.Array]]]:
     """Compose L KAN layers: KAN(x) = phi_{L-1} o ... o phi_0 (paper Eq. 1)."""
     hidden = []
     for p, c in zip(params_list, cfgs):
@@ -180,7 +182,8 @@ def kan_op_counts(cfg: KANConfig, batch: int = 1) -> Dict[str, float]:
     }
 
 
-def kan_reference_dense(params: Params, x: jax.Array, cfg: KANConfig):
+def kan_reference_dense(params: Params, x: jax.Array,
+                        cfg: KANConfig) -> jax.Array:
     """Slow dense-oracle apply (tests); honors the stage-2 mask."""
     xf = x.reshape(-1, cfg.n_in).astype(jnp.float32)
     b = bases_dense(cfg.spec.clip(xf), cfg.spec)

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 
 class ExecMode(enum.Enum):
@@ -49,7 +49,7 @@ class LayerKind(enum.Enum):
 MODE_FOR_KIND = {LayerKind.KAN: ExecMode.PIPELINE, LayerKind.MLP: ExecMode.PARALLEL}
 
 
-def parse_mode(mode) -> ExecMode:
+def parse_mode(mode: Union["ExecMode", str]) -> ExecMode:
     """Coerce a mode spelling (ExecMode | "pipeline"/"kan" | "parallel"/"mlp")
     into an ExecMode, for CLI flags and array mode-pin configs."""
     if isinstance(mode, ExecMode):

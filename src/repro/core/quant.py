@@ -39,7 +39,7 @@ serves the dense and every sparsified deployment of a checkpoint.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,19 +54,23 @@ _EPS = 1e-8              # all-zero slices get a harmless positive scale
 # ---------------------------------------------------------------------------
 
 
-def quantize(x: jax.Array, scale) -> jax.Array:
+def quantize(x: jax.Array,
+             scale: Union[float, np.ndarray, jax.Array]) -> jax.Array:
     """f32 -> int8 under a symmetric scale (scalar or broadcastable)."""
     s = jnp.asarray(scale, jnp.float32)
     q = jnp.round(x.astype(jnp.float32) / s)
     return jnp.clip(q, -Q_MAX, Q_MAX).astype(jnp.int8)
 
 
-def dequantize(q: jax.Array, scale) -> jax.Array:
+def dequantize(q: jax.Array,
+               scale: Union[float, np.ndarray, jax.Array]) -> jax.Array:
     """int8 -> f32 under the same symmetric scale."""
     return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
 
 
-def symmetric_scale(x: np.ndarray, axis=None) -> np.ndarray:
+def symmetric_scale(x: np.ndarray,
+                    axis: Union[None, int, Tuple[int, ...]] = None
+                    ) -> np.ndarray:
     """Calibration-time scale: ``max|x| / 127`` over ``axis`` (host-side)."""
     m = np.max(np.abs(np.asarray(x, np.float32)), axis=axis)
     return np.maximum(m, _EPS) / Q_MAX
@@ -94,7 +98,7 @@ class LayerScales:
     w_b: Optional[float] = None            # kan: scalar
     t: Optional[np.ndarray] = None         # kan: (n_bases,)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.kind == "mlp":
             if self.w is None or self.w_b is not None or self.t is not None:
                 raise ValueError("mlp LayerScales needs w and only w")
@@ -136,7 +140,8 @@ class StackScales:
         }
 
 
-def derive_layer_scales(kind: str, p, act: np.ndarray) -> LayerScales:
+def derive_layer_scales(kind: str, p: Dict[str, jax.Array],
+                        act: np.ndarray) -> LayerScales:
     """One layer's scales from its params + calibration input activations."""
     x = float(symmetric_scale(act))
     if kind == "mlp":
@@ -154,7 +159,8 @@ def derive_layer_scales(kind: str, p, act: np.ndarray) -> LayerScales:
 # ---------------------------------------------------------------------------
 
 
-def quantize_stack_params(params: list, model, scales: StackScales) -> list:
+def quantize_stack_params(params: list, model: Any,
+                          scales: StackScales) -> list:
     """f32 stack params -> int8 params (+ f32 bias) under ``scales``.
 
     KAN layers keep the FULL (n_in, n_bases, n_out) table quantized
@@ -190,9 +196,9 @@ def quantize_stack_params(params: list, model, scales: StackScales) -> list:
 # ---------------------------------------------------------------------------
 
 
-def quant_stack_apply(qparams: list, x: jax.Array, model,
+def quant_stack_apply(qparams: list, x: jax.Array, model: Any,
                       scales: StackScales, *, impl: str = "auto",
-                      masks=None) -> jax.Array:
+                      masks: Optional[Sequence] = None) -> jax.Array:
     """Run the int8-quantized stack; returns f32 outputs.
 
     Mirrors ``vikin_stack_apply`` layer by layer: activations enter each
@@ -231,7 +237,8 @@ def quant_stack_apply(qparams: list, x: jax.Array, model,
     return y
 
 
-def quant_error_bound(ls: LayerScales, kb=None) -> float:
+def quant_error_bound(ls: LayerScales,
+                      kb: Optional[Sequence[int]] = None) -> float:
     """Loose per-output worst-case dequantization step of one layer's
     weights (tests use it to bound quantize->dequantize parity): half a
     quantization step per weight element on the widest-scale slot."""

@@ -48,7 +48,7 @@ class PatternMask:
 
     keep: np.ndarray  # (n,) bool
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         assert self.keep.dtype == np.bool_ and self.keep.ndim == 1
 
     @property
@@ -67,7 +67,7 @@ class PatternMask:
         """Static gather indices of kept positions (host numpy)."""
         return np.nonzero(self.keep)[0].astype(np.int32)
 
-    def as_jnp(self, dtype=jnp.float32) -> jax.Array:
+    def as_jnp(self, dtype: object = jnp.float32) -> jax.Array:
         return jnp.asarray(self.keep.astype(np.float32), dtype)
 
     def is_tiled(self) -> Optional[np.ndarray]:

@@ -27,7 +27,6 @@ in-range input (property-tested).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Tuple
 
 import jax
@@ -52,7 +51,7 @@ class SplineSpec:
     x0: float = -1.0
     x1: float = 1.0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.grid_size not in VALID_G:
             raise ValueError(f"G must be one of {VALID_G}, got {self.grid_size}")
         if self.order not in VALID_K:

@@ -153,7 +153,10 @@ _GLOBAL_CACHE: Optional[AutotuneCache] = None
 
 
 def get_cache() -> AutotuneCache:
-    global _GLOBAL_CACHE
+    # Trace-time global by design: block lookups are static compile-time
+    # config (the same cache state always resolves the same blocks for a
+    # shape), so memoizing the cache object across traces is deliberate.
+    global _GLOBAL_CACHE  # vikinlint: disable=VL003
     if _GLOBAL_CACHE is None or _GLOBAL_CACHE.path != default_cache_path():
         _GLOBAL_CACHE = AutotuneCache()
     return _GLOBAL_CACHE

@@ -1,0 +1,66 @@
+"""The ONE scale/bias/activation epilogue shared by kernels and oracles.
+
+The bitwise kernel==oracle contract (DESIGN.md Secs. 16-17) holds only
+because both sides of every kernel/oracle pair apply the *same* epilogue
+ops in the *same* order on the f32 accumulator: a re-implemented inline
+epilogue is exactly how the PR 7 FMA-fusion 1-ulp divergence crept in.
+This module is therefore the single place the epilogue math may live;
+``tools/vikinlint`` rule VL002 statically enforces that every registered
+kernel/oracle pair calls these functions and never re-derives them inline
+(subscripting ``ACTS`` outside this module is the tell it looks for).
+
+Both functions are plain jnp-on-values, so they trace identically inside a
+Pallas kernel body (on loaded refs), in an XLA fallback branch, and in an
+eager oracle.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Fused activation table.  Keyed by the ``act`` strings the layer configs
+# carry; None is the identity (bias-only epilogue).
+ACTS: Dict[Optional[str], Callable[[jax.Array], jax.Array]] = {
+    None: lambda v: v,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def bias_act(
+    acc: jax.Array,
+    bias: Optional[jax.Array],
+    act: Optional[str],
+    out_dtype: jnp.dtype,
+) -> jax.Array:
+    """``act(acc + bias)`` on the f32 accumulator, cast to ``out_dtype``.
+
+    ``bias`` upcasts to f32 before the add (an exact widening for every
+    supported dtype), so callers passing a bf16 bias and callers relying on
+    implicit promotion see bit-identical sums.  ``bias=None`` skips the add
+    entirely -- zero-bias and no-bias callers stay distinguishable.
+    """
+    y = acc if bias is None else acc + bias.astype(jnp.float32)
+    return ACTS[act](y).astype(out_dtype)
+
+
+def scale_bias_act(
+    acc: jax.Array,
+    col_scale: jax.Array,
+    bias: Optional[jax.Array],
+    act: Optional[str],
+) -> jax.Array:
+    """Int8 dequantization epilogue: ``act(acc * s + bias)``, f32 out.
+
+    Applied once, AFTER full accumulation, identically for the Pallas q8
+    kernel's raw integer accumulator and the jnp oracle's -- the scale
+    multiply and bias add stay two separate roundings (never an FMA), which
+    is what makes the tiled and eager paths bitwise identical.
+    """
+    y = acc * col_scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return ACTS[act](y).astype(jnp.float32)

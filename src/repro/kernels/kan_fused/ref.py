@@ -25,6 +25,7 @@ def kan_layer_ref(
     b = bases_dense(spec.clip(xf), spec)              # (B, n_in, n_bases)
     if basis_mask is not None:
         b = b * jnp.asarray(basis_mask.keep.astype("float32"))
-    y = jnp.dot(silu(xf), w_b.astype(jnp.float32))
+    y = jnp.dot(silu(xf), w_b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
     y = y + jnp.einsum("bpi,pio->bo", b, t.astype(jnp.float32))
     return y.astype(x.dtype)

@@ -7,7 +7,6 @@ byte saving is visible to cost_analysis either way.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -22,7 +21,7 @@ from repro.kernels.pattern_matmul.pattern_matmul import (
     matmul_compact_pallas,
     matmul_q8_pallas,
 )
-from repro.kernels.pattern_matmul.ref import ACTS
+from repro.kernels.epilogue import bias_act, scale_bias_act
 
 
 def _on_tpu() -> bool:
@@ -81,10 +80,9 @@ def pattern_linear(
                                   interpret=(impl == "pallas_interpret"),
                                   **bk)
     elif impl == "jnp":
-        y = jnp.dot(xf, w, preferred_element_type=jnp.float32)
-        if bias is not None:
-            y = y + bias
-        y = ACTS[act](y).astype(x.dtype)
+        acc = jnp.dot(xf, w, preferred_element_type=jnp.float32)
+        # the SAME epilogue the Pallas kernel fuses (VL002 contract)
+        y = bias_act(acc, bias, act, x.dtype)
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return y.reshape(*lead, w.shape[-1])
@@ -134,8 +132,5 @@ def pattern_linear_q8(
     # Shared dequantization epilogue: applied once AFTER full accumulation,
     # identically for both impls (keeping it out of the kernel avoids an
     # FMA single-rounding divergence between interpret and eager jnp).
-    y = acc * col_scale.astype(jnp.float32)
-    if bias is not None:
-        y = y + bias.astype(jnp.float32)
-    y = ACTS[act](y).astype(jnp.float32)
+    y = scale_bias_act(acc, col_scale, bias, act)
     return y.reshape(*lead, w_q.shape[-1])

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pattern_matmul.ref import ACTS
+from repro.kernels.epilogue import bias_act
 
 DEFAULT_BM = 128
 DEFAULT_BK = 512
@@ -42,8 +42,8 @@ def _mm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int, act):
 
     @pl.when(k == k_steps - 1)
     def _epilogue():
-        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
-        o_ref[...] = ACTS[act](y).astype(o_ref.dtype)
+        # shared with the jnp fallback and the dense oracle (VL002 contract)
+        o_ref[...] = bias_act(acc_ref[...], b_ref[...], act, o_ref.dtype)
 
 
 def _mm_kernel_q8(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):

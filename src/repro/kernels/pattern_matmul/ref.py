@@ -7,13 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparsity import PatternMask, apply_mask
+from repro.kernels.epilogue import ACTS, bias_act
 
-ACTS = {
-    None: lambda v: v,
-    "relu": jax.nn.relu,
-    "gelu": jax.nn.gelu,
-    "silu": jax.nn.silu,
-}
+__all__ = ["ACTS", "pattern_matmul_ref"]
 
 
 def pattern_matmul_ref(
@@ -26,10 +22,11 @@ def pattern_matmul_ref(
     """y = act((x * mask) @ w + bias) computed densely (no compaction).
 
     This is the semantics the compacted kernel must match: masked-out input
-    nodes contribute nothing, regardless of their value.
+    nodes contribute nothing, regardless of their value.  The epilogue is
+    the shared ``repro.kernels.epilogue.bias_act`` -- the same function the
+    Pallas kernel and the XLA fallback call (VL002 contract).
     """
     xm = apply_mask(x, mask) if mask is not None else x
-    y = jnp.dot(xm.astype(jnp.float32), w.astype(jnp.float32))
-    if bias is not None:
-        y = y + bias.astype(jnp.float32)
-    return ACTS[act](y).astype(x.dtype)
+    acc = jnp.dot(xm.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return bias_act(acc, bias, act, x.dtype)

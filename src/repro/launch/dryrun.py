@@ -33,10 +33,10 @@ import time
 import traceback
 from typing import Dict, Optional
 
-import jax
+import jax  # noqa: F401  (locks the 512-device count before any other jax import)
 
-from repro.configs.base import SHAPES, ShapeSpec
-from repro.configs.registry import ARCHS, get_config, runnable_cells
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config, runnable_cells
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import StepOptions, lower_cell
 
@@ -189,7 +189,6 @@ def cell_path(out_dir: str, arch: str, shape: str, mesh_tag: str) -> str:
 def recalib_cell(arch: str, shape_name: str, out_dir: str) -> None:
     """Replace calib1/calib2 in an existing single-mesh JSON with unrolled
     variants (used to patch artifacts produced before the unroll fix)."""
-    import dataclasses as dc
     path = cell_path(out_dir, arch, shape_name, "single")
     if not os.path.exists(path):
         return

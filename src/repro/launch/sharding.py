@@ -22,7 +22,7 @@ Rules match parameter KEYPATHS (stable, test-pinned), not shapes.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -6,8 +6,7 @@ definition serves both (CPU smoke runs pass a 1-device mesh).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

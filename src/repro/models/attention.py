@@ -14,7 +14,6 @@ sharded over the model axis at scale (launch/sharding.py), GQA kv_heads
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core.kan import KANConfig, kan_init
 from repro.core.splines import SplineSpec
 from repro.kernels.kan_fused.ops import flatten_t, kan_linear
-from repro.models.layers import dense, dense_init, shard_hint
+from repro.models.layers import dense, dense_init
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,9 +19,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+from repro.models.layers import dense, dense_init
 
 C_FACTOR = 8.0
 

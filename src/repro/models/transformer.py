@@ -22,7 +22,6 @@ Everything is functional: params/caches are pytrees, apply fns are pure.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 

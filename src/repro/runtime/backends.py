@@ -42,7 +42,7 @@ DESIGN.md Sec. 12.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -101,7 +101,7 @@ class Request:
     sim_admit: float = 0.0
     sim_done: float = 0.0
 
-    def result(self):
+    def result(self) -> Any:
         return self.generated if self.output is None else self.output
 
 
@@ -114,9 +114,9 @@ class ModelBackend:
     # this; the engine forwards it to the batch policy (SchedContext
     # .pinned_modes) so mode-affinity grouping relaxes for modes that cost
     # nothing to enter (DESIGN.md Sec. 18).
-    pinned_modes = None
+    pinned_modes: Optional[FrozenSet[ExecMode]] = None
 
-    def init_state(self, n_slots: int, max_len: int):
+    def init_state(self, n_slots: int, max_len: int) -> Any:
         raise NotImplementedError
 
     def validate(self, req: Request) -> None:
@@ -124,11 +124,12 @@ class ModelBackend:
         enters the queue), so prefill can never fail mid-run and drop
         already-admitted work."""
 
-    def prefill(self, state, slot: int, req: Request):
+    def prefill(self, state: Any, slot: int, req: Request) -> Any:
         """Stage ``req`` into lane ``slot``; returns the new state."""
         raise NotImplementedError
 
-    def step(self, state, slot_req: Sequence[Optional[Request]]):
+    def step(self, state: Any,
+             slot_req: Sequence[Optional[Request]]) -> Any:
         """One batched iteration over active slots; returns the new state.
 
         Mutates the active Request objects (append outputs, set ``done``).
@@ -155,7 +156,7 @@ class ModelBackend:
 # ---------------------------------------------------------------------------
 
 
-def transformer_layer_works(cfg) -> List[LayerWork]:
+def transformer_layer_works(cfg: Any) -> List[LayerWork]:
     """Per-phase VIKIN LayerWorks for a kan-ffn transformer arch.
 
     The mode-plan phase mapping of DESIGN.md Sec. 17: every block's
@@ -217,9 +218,10 @@ class TransformerBackend(ModelBackend):
     prompt token.  Plain archs keep batch_report() -> None.
     """
 
-    def __init__(self, cfg, params, *, impl: Optional[str] = None,
-                 masks=None, precision: str = "f32",
-                 hw: Optional[VikinHW] = None):
+    def __init__(self, cfg: Any, params: Any, *,
+                 impl: Optional[str] = None, masks: Any = None,
+                 precision: str = "f32",
+                 hw: Optional[VikinHW] = None) -> None:
         import jax
 
         from repro.models import transformer as T
@@ -249,10 +251,12 @@ class TransformerBackend(ModelBackend):
             lambda p, tok, c: T.decode_step(p, cfg, tok, c))
         # prefill is jitted per exact prompt length: no padding, so slot
         # caches carry the true per-request position (the per-row 'len').
-        self._prefill_cache = {}
-        self.n_slots = self.max_len = None
+        self._prefill_cache: Dict[int, Callable[..., Any]] = {}
+        self.n_slots: Optional[int] = None
+        self.max_len: Optional[int] = None
         self.hw = hw or VikinHW()
-        self.plan = self.layers = None
+        self.plan: Optional[ModePlan] = None
+        self.layers: Optional[List[LayerWork]] = None
         if cfg.ffn_kinds is not None:
             self.layers = transformer_layer_works(cfg)
             self.plan = ModePlan.for_layers([w.kind for w in self.layers])
@@ -260,21 +264,21 @@ class TransformerBackend(ModelBackend):
         self._report_cache: Dict[Tuple[int, int, Optional[ExecMode]],
                                  Dict[str, float]] = {}
 
-    def init_state(self, n_slots: int, max_len: int):
+    def init_state(self, n_slots: int, max_len: int) -> Any:
         self.n_slots, self.max_len = n_slots, max_len
         return self._T.init_caches(self.cfg, n_slots, max_len)
 
-    def _prefill_fn(self, length: int):
+    def _prefill_fn(self, length: int) -> Callable[..., Any]:
         if length not in self._prefill_cache:
             cfg, T = self.cfg, self._T
 
-            def fn(params, tokens):
+            def fn(params: Any, tokens: Any) -> Any:
                 return T.prefill(params, cfg, tokens, max_len=self.max_len)
 
             self._prefill_cache[length] = self._jax.jit(fn)
         return self._prefill_cache[length]
 
-    def prefill(self, caches, slot: int, req: Request):
+    def prefill(self, caches: Any, slot: int, req: Request) -> Any:
         """Prefill one request and splice its (batch=1) cache into lane
         ``slot`` of the server's (batch=n_slots) caches."""
         import jax.numpy as jnp
@@ -290,7 +294,7 @@ class TransformerBackend(ModelBackend):
         next_tok = int(jax.device_get(T.greedy_token(logits))[0, 0])
         req.generated.append(next_tok)
 
-        def put(full, new):
+        def put(full: Any, new: Any) -> Any:
             # find the batch dim: the dim where full is n_slots-wide and the
             # fresh cache is 1-wide (dim 0 for plain, dim 1 under the layer
             # stack).  Everything else (shapes) matches by construction.
@@ -303,7 +307,8 @@ class TransformerBackend(ModelBackend):
 
         return jax.tree.map(put, caches, cache)
 
-    def step(self, caches, slot_req: Sequence[Optional[Request]]):
+    def step(self, caches: Any,
+             slot_req: Sequence[Optional[Request]]) -> Any:
         import jax.numpy as jnp
 
         jax, T = self._jax, self._T
@@ -390,10 +395,11 @@ class VikinBackend(ModelBackend):
     precision; the cycle model charges precision-dependent DMA bytes.
     """
 
-    def __init__(self, model, params, *, impl: str = "auto",
+    def __init__(self, model: Any, params: Any, *, impl: str = "auto",
                  hw: Optional[VikinHW] = None, min_bucket: int = 2,
                  nnz_rates: Optional[Sequence[float]] = None,
-                 masks=None, precision: str = "f32", scales=None):
+                 masks: Any = None, precision: str = "f32",
+                 scales: Any = None) -> None:
         import jax
 
         if precision not in ("f32", "bf16", "int8"):
@@ -430,9 +436,9 @@ class VikinBackend(ModelBackend):
         self._fwd = jax.jit(self.forward_fn())
         self._report_cache: Dict[Tuple[int, Optional[ExecMode]],
                                  Dict[str, float]] = {}
-        self.n_slots = None
+        self.n_slots: Optional[int] = None
 
-    def forward_fn(self):
+    def forward_fn(self) -> Callable[[Any, Any], Any]:
         """The raw batched forward ``(params, x) -> y`` this backend jits;
         the ONE definition of what a VIKIN forward is.  ShardedVikinBackend
         wraps exactly this in shard_map, so the two backends cannot
@@ -455,7 +461,7 @@ class VikinBackend(ModelBackend):
         return lambda p, x: vikin_stack_apply(p, x, model, impl=impl,
                                               masks=masks)
 
-    def init_state(self, n_slots: int, max_len: int):
+    def init_state(self, n_slots: int, max_len: int) -> np.ndarray:
         self.n_slots = n_slots
         # staging buffer of request inputs, one lane per slot
         return np.zeros((n_slots, self.n_in), np.float32)
@@ -472,7 +478,8 @@ class VikinBackend(ModelBackend):
                 f"request {req.rid}: payload has {vec.shape[0]} features, "
                 f"model {self.model.name!r} expects {self.n_in}")
 
-    def prefill(self, inputs, slot: int, req: Request):
+    def prefill(self, inputs: np.ndarray, slot: int,
+                req: Request) -> np.ndarray:
         inputs = inputs.copy()
         inputs[slot] = np.asarray(req.prompt, np.float32).reshape(-1)
         return inputs
@@ -489,7 +496,8 @@ class VikinBackend(ModelBackend):
         self._fwd(self.params,
                   np.zeros((self.bucket(n_active), self.n_in), np.float32))
 
-    def step(self, inputs, slot_req: Sequence[Optional[Request]]):
+    def step(self, inputs: np.ndarray,
+             slot_req: Sequence[Optional[Request]]) -> np.ndarray:
         active = [s for s, r in enumerate(slot_req) if r is not None]
         bucket = self.bucket(len(active))
         xb = np.zeros((bucket, self.n_in), np.float32)
@@ -543,7 +551,7 @@ class MultiWorkloadBackend(ModelBackend):
     per workload) next to the engine's global stats.
     """
 
-    def __init__(self, backends: Dict[str, ModelBackend]):
+    def __init__(self, backends: Dict[str, ModelBackend]) -> None:
         if not backends:
             raise ValueError("MultiWorkloadBackend needs >= 1 workload")
         self.backends = dict(backends)
@@ -562,7 +570,7 @@ class MultiWorkloadBackend(ModelBackend):
         return b.bucket(n_active) if hasattr(b, "bucket") else n_active
 
     @property
-    def pinned_modes(self):
+    def pinned_modes(self) -> Optional[FrozenSet[ExecMode]]:
         """Union of the sub-backends' chip pins, but only when EVERY
         mode-planned sub-backend is pinned (hetero array plan) -- a single
         reconfiguring sub-backend means flips still cost somewhere, so the
@@ -585,7 +593,7 @@ class MultiWorkloadBackend(ModelBackend):
                 f"serves {sorted(self.backends)}")
         return self.backends[workload].input_dim()
 
-    def init_state(self, n_slots: int, max_len: int):
+    def init_state(self, n_slots: int, max_len: int) -> Dict[str, Any]:
         return {n: b.init_state(n_slots, max_len)
                 for n, b in self.backends.items()}
 
@@ -596,13 +604,15 @@ class MultiWorkloadBackend(ModelBackend):
                 f"this engine serves {sorted(self.backends)}")
         self.backends[req.workload].validate(req)
 
-    def prefill(self, state, slot: int, req: Request):
+    def prefill(self, state: Dict[str, Any], slot: int,
+                req: Request) -> Dict[str, Any]:
         state = dict(state)
         state[req.workload] = self.backends[req.workload].prefill(
             state[req.workload], slot, req)
         return state
 
-    def step(self, state, slot_req: Sequence[Optional[Request]]):
+    def step(self, state: Dict[str, Any],
+             slot_req: Sequence[Optional[Request]]) -> Dict[str, Any]:
         state = dict(state)
         order: List[str] = []
         for r in slot_req:

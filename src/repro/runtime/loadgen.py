@@ -47,7 +47,7 @@ import dataclasses
 import hashlib
 import json
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -136,7 +136,8 @@ def _attach_classes(ts: Sequence[float], rng: np.random.Generator,
 
 
 def poisson_trace(rate_rps: float, n_events: int, *, seed: int = 0,
-                  workloads=None, priority_classes=None) -> Trace:
+                  workloads: Any = None,
+                  priority_classes: Any = None) -> Trace:
     """Memoryless arrivals at ``rate_rps`` (exponential inter-arrivals)."""
     if rate_rps <= 0 or n_events < 1:
         raise ValueError("poisson_trace needs rate_rps > 0 and n_events >= 1")
@@ -150,7 +151,8 @@ def poisson_trace(rate_rps: float, n_events: int, *, seed: int = 0,
 
 def bursty_trace(rate_lo_rps: float, rate_hi_rps: float, n_events: int, *,
                  mean_calm_s: float, mean_burst_s: float, seed: int = 0,
-                 workloads=None, priority_classes=None) -> Trace:
+                 workloads: Any = None,
+                 priority_classes: Any = None) -> Trace:
     """Markov-modulated Poisson arrivals: calm periods at ``rate_lo_rps``
     and bursts at ``rate_hi_rps``, with exponential dwell times.  State
     flips are memoryless, so discarding the partial inter-arrival gap at
@@ -193,7 +195,7 @@ class SimClock:
     stamped after the report lands at the batch's simulated END; while the
     engine is idle, ``jump_to`` fast-forwards to the next arrival."""
 
-    def __init__(self, engine):
+    def __init__(self, engine: Any) -> None:
         self.engine = engine
         self._idle = 0.0
 
@@ -206,7 +208,8 @@ class SimClock:
             self._idle += t - cur
 
 
-def estimate_capacity_rps(model, *, n_slots: int = 8, hw=None) -> float:
+def estimate_capacity_rps(model: Any, *, n_slots: int = 8,
+                          hw: Any = None) -> float:
     """Steady-state completions per simulated second at full occupancy,
     from the cycle model alone (no jit, no params): back-to-back batches
     of ``n_slots`` with the mode carried over between them."""
@@ -232,12 +235,12 @@ def _percentiles(xs: List[float]) -> Dict[str, float]:
     return {f"p{q}_latency_s": _percentile(s, q) for q in (50, 95, 99)}
 
 
-def _payload(engine, ev: TraceEvent, multi: bool) -> np.ndarray:
+def _payload(engine: Any, ev: TraceEvent, multi: bool) -> np.ndarray:
     dim = engine.backend.input_dim(ev.workload if multi else None)
     return np.random.default_rng(ev.seed).random(dim, dtype=np.float32)
 
 
-def replay(engine, trace: Trace, *, mode: str = "sim",
+def replay(engine: Any, trace: Trace, *, mode: str = "sim",
            max_ticks: int = 1_000_000) -> Dict[str, object]:
     """Drive ``engine`` open-loop through ``trace``; returns a report.
 
@@ -266,7 +269,7 @@ def replay(engine, trace: Trace, *, mode: str = "sim",
         engine.clock = lambda: time.perf_counter() - t0
 
     rids: List[Tuple[int, TraceEvent]] = []
-    submitted = refused = 0
+    submitted = 0
     max_depth = 0
     i, n, ticks = 0, len(events), 0
     last_progress = (0, 0)
@@ -284,7 +287,7 @@ def replay(engine, trace: Trace, *, mode: str = "sim",
                 rids.append((rid, ev))
                 submitted += 1
             except AdmissionError:
-                refused += 1            # counted in engine.stats too
+                pass                    # refusals counted in engine.stats
         depth = max(engine.queue_depths().values(), default=0)
         max_depth = max(max_depth, depth)
         busy = any(r is not None for r in engine.slot_req)

@@ -38,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.modes import ExecMode, ModePlan
 
@@ -150,7 +150,7 @@ class ModeAffinityPolicy(BatchPolicy):
 
     name = "mode-affinity"
 
-    def __init__(self, max_starve_ticks: int = 8):
+    def __init__(self, max_starve_ticks: int = 8) -> None:
         if max_starve_ticks < 1:
             raise ValueError("max_starve_ticks must be >= 1")
         self.max_starve_ticks = max_starve_ticks
@@ -158,11 +158,12 @@ class ModeAffinityPolicy(BatchPolicy):
 
     # -- request ordering within the chosen workload -----------------------
     @staticmethod
-    def _req_key(req: Request):
+    def _req_key(req: Request) -> Tuple[int, float, int]:
         return (-req.priority, _abs_deadline(req), req.rid)
 
     # -- workload choice ---------------------------------------------------
-    def _score(self, w, ctx: SchedContext):
+    def _score(self, w: Optional[str],
+               ctx: SchedContext) -> Tuple[object, ...]:
         """Higher tuple wins: overdue work > mode affinity > priority >
         less padding waste > bigger batch > earlier arrival."""
         q = ctx.queues[w]
@@ -185,7 +186,8 @@ class ModeAffinityPolicy(BatchPolicy):
             -min(r.rid for r in q),
         )
 
-    def _batch_size(self, w, qlen: int, ctx: SchedContext) -> int:
+    def _batch_size(self, w: Optional[str], qlen: int,
+                    ctx: SchedContext) -> int:
         """Latency-neutral zero-padding trim: the largest k <= free slots
         whose bucket is exactly k, provided serving k per tick drains the
         queue in the same number of ticks as serving min(qlen, free)."""
@@ -225,7 +227,7 @@ class ModeAffinityPolicy(BatchPolicy):
 POLICIES = {p.name: p for p in (FifoPolicy, ModeAffinityPolicy)}
 
 
-def get_policy(policy) -> BatchPolicy:
+def get_policy(policy: Union[str, BatchPolicy]) -> BatchPolicy:
     """Resolve a policy name (or pass an instance through)."""
     if isinstance(policy, BatchPolicy):
         return policy

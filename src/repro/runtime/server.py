@@ -40,7 +40,7 @@ deadline semantics hold identically in wall and simulated time.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
@@ -66,7 +66,8 @@ class AdmissionError(RuntimeError):
     consumed and nothing needs cleanup -- retry later or raise priority.
     """
 
-    def __init__(self, workload: Optional[str], max_queue: int, action: str):
+    def __init__(self, workload: Optional[str], max_queue: int,
+                 action: str) -> None:
         self.workload, self.max_queue, self.action = workload, max_queue, action
         super().__init__(
             f"admission {action}: workload {workload!r} queue is at "
@@ -89,7 +90,7 @@ class IncompleteRunError(RuntimeError):
 
     def __init__(self, pending: List[int], completed: Dict[int, list],
                  shed: Optional[List[int]] = None,
-                 expired: Optional[List[int]] = None):
+                 expired: Optional[List[int]] = None) -> None:
         self.pending = sorted(pending)
         self.completed = completed
         self.shed = sorted(shed or [])
@@ -125,10 +126,11 @@ class Engine:
     ADMISSION_POLICIES = ("unbounded", "reject", "shed")
 
     def __init__(self, backend: ModelBackend, *, n_slots: int = 4,
-                 max_len: int = 256, policy="mode-affinity",
+                 max_len: int = 256,
+                 policy: Union[str, "BatchPolicy"] = "mode-affinity",
                  max_queue: Optional[int] = None,
                  admission: str = "unbounded", drop_expired: bool = False,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None) -> None:
         if admission not in self.ADMISSION_POLICIES:
             raise ValueError(f"unknown admission policy {admission!r}; "
                              f"choose from {self.ADMISSION_POLICIES}")
@@ -285,14 +287,14 @@ class Engine:
             return b.bucket(k)
         return k
 
-    def _plans(self):
+    def _plans(self) -> Dict[Optional[str], Any]:
         plans = getattr(self.backend, "plans", None)
         if plans is not None:
             return plans
         plan = getattr(self.backend, "plan", None)
         return {None: plan} if plan is not None else {}
 
-    def _admit(self):
+    def _admit(self) -> None:
         free = [s for s, r in enumerate(self.slot_req) if r is None]
         if not free or not self._queued():
             return
@@ -314,7 +316,7 @@ class Engine:
             self._sample("queue_wait_wall", req.t_admit - req.t_submit)
             self._sample("queue_wait_sim", req.sim_admit - req.sim_submit)
 
-    def tick(self):
+    def tick(self) -> None:
         """One engine iteration: expire dead queued work, admit requests,
         run one batched step for all active slots, recycle finished slots,
         re-admit into the freed slots.  Times itself, so ``throughput()``
@@ -441,8 +443,9 @@ class Server(Engine):
     kan-ffn archs (kernel dispatch, calibrated two-stage masks, f32|bf16
     serving); the defaults serve plain archs unchanged."""
 
-    def __init__(self, cfg, params, *, n_slots: int = 4, max_len: int = 256,
-                 impl=None, masks=None, precision: str = "f32"):
+    def __init__(self, cfg: Any, params: Any, *, n_slots: int = 4,
+                 max_len: int = 256, impl: Optional[str] = None,
+                 masks: Any = None, precision: str = "f32") -> None:
         super().__init__(
             TransformerBackend(cfg, params, impl=impl, masks=masks,
                                precision=precision),
@@ -450,5 +453,5 @@ class Server(Engine):
         self.cfg, self.params = self.backend.cfg, self.backend.params
 
     @property
-    def caches(self):
+    def caches(self) -> Any:
         return self.state

@@ -41,7 +41,7 @@ which device, stage, or bucket computed them.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -63,11 +63,12 @@ class ShardedVikinBackend(VikinBackend):
     change; state staging, validation and slot handling are inherited.
     """
 
-    def __init__(self, model, params, *, devices: int, impl: str = "auto",
+    def __init__(self, model: Any, params: Any, *, devices: int,
+                 impl: str = "auto",
                  hw: Optional[VikinHW] = None, min_bucket: int = 2,
                  nnz_rates: Optional[Sequence[float]] = None,
-                 masks=None, array: Optional[VikinArray] = None,
-                 precision: str = "f32", scales=None):
+                 masks: Any = None, array: Optional[VikinArray] = None,
+                 precision: str = "f32", scales: Any = None) -> None:
         super().__init__(model, params, impl=impl, hw=hw,
                          min_bucket=min_bucket, nnz_rates=nnz_rates,
                          masks=masks, precision=precision, scales=scales)
@@ -137,11 +138,12 @@ class _StagedVikinBackend(VikinBackend):
 
     plan_name = "staged"
 
-    def __init__(self, model, params, *, devices: int, impl: str = "auto",
+    def __init__(self, model: Any, params: Any, *, devices: int,
+                 impl: str = "auto",
                  hw: Optional[VikinHW] = None, min_bucket: int = 2,
                  nnz_rates: Optional[Sequence[float]] = None,
-                 masks=None, array: Optional[VikinArray] = None,
-                 precision: str = "f32", scales=None):
+                 masks: Any = None, array: Optional[VikinArray] = None,
+                 precision: str = "f32", scales: Any = None) -> None:
         if precision == "int8":
             raise ValueError(
                 f"the {self.plan_name!r} array plan serves f32/bf16 only: "
@@ -186,7 +188,7 @@ class _StagedVikinBackend(VikinBackend):
 
         bf16 = self.precision == "bf16"
 
-        def fwd(_params, x):
+        def fwd(_params: Any, x: Any) -> Any:
             h = jnp.asarray(x)
             if bf16:
                 h = h.astype(jnp.bfloat16)
@@ -199,7 +201,7 @@ class _StagedVikinBackend(VikinBackend):
     def _default_array(self) -> VikinArray:
         raise NotImplementedError
 
-    def _stage_ranges(self):
+    def _stage_ranges(self) -> List[Tuple[int, int, Any]]:
         """[(lo, hi, device), ...] covering layers 0..n in order."""
         raise NotImplementedError
 
@@ -218,8 +220,9 @@ class PipelineVikinBackend(_StagedVikinBackend):
 
     plan_name = "pipeline"
 
-    def __init__(self, model, params, *, devices: int,
-                 stage_map: Optional[Sequence[int]] = None, **kw):
+    def __init__(self, model: Any, params: Any, *, devices: int,
+                 stage_map: Optional[Sequence[int]] = None,
+                 **kw: Any) -> None:
         self._stage_map = (tuple(int(n) for n in stage_map)
                            if stage_map is not None else None)
         super().__init__(model, params, devices=devices, **kw)
@@ -229,9 +232,10 @@ class PipelineVikinBackend(_StagedVikinBackend):
                           precision=self.precision, plan="pipeline",
                           stage_map=self._stage_map)
 
-    def _stage_ranges(self):
+    def _stage_ranges(self) -> List[Tuple[int, int, Any]]:
         sizes = self.array.stage_sizes(len(self.layers))
-        out, lo = [], 0
+        out: List[Tuple[int, int, Any]] = []
+        lo = 0
         for s, n in enumerate(sizes):
             out.append((lo, lo + n, self.devices[s]))
             lo += n
@@ -257,8 +261,9 @@ class HeteroVikinBackend(_StagedVikinBackend):
 
     plan_name = "hetero"
 
-    def __init__(self, model, params, *, devices: int,
-                 mode_pins: Optional[Sequence] = None, **kw):
+    def __init__(self, model: Any, params: Any, *, devices: int,
+                 mode_pins: Optional[Sequence] = None,
+                 **kw: Any) -> None:
         self._mode_pins = (tuple(parse_mode(m) for m in mode_pins)
                            if mode_pins is not None else None)
         super().__init__(model, params, devices=devices, **kw)
@@ -277,9 +282,9 @@ class HeteroVikinBackend(_StagedVikinBackend):
                           precision=self.precision, plan="hetero",
                           mode_pins=self._mode_pins)
 
-    def _stage_ranges(self):
+    def _stage_ranges(self) -> List[Tuple[int, int, Any]]:
         pins = self.array.resolved_pins()
-        out = []
+        out: List[Tuple[int, int, Any]] = []
         for mode, lo, hi in self.plan.segment_slices():
             pool = [self.devices[i] for i, m in enumerate(pins)
                     if m is mode]
@@ -294,9 +299,11 @@ class HeteroVikinBackend(_StagedVikinBackend):
         return out
 
 
-def make_array_backend(model, params, *, devices: int, plan: str = "data",
+def make_array_backend(model: Any, params: Any, *, devices: int,
+                       plan: str = "data",
                        stage_map: Optional[Sequence[int]] = None,
-                       mode_pins: Optional[Sequence] = None, **kw):
+                       mode_pins: Optional[Sequence] = None,
+                       **kw: Any) -> Any:
     """Build the array backend for ``--array-plan`` (launch/serve).
 
     data -> ShardedVikinBackend (rows split, params replicated),

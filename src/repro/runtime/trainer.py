@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -56,9 +56,11 @@ class TrainerConfig:
 
 
 class Trainer:
-    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, mesh, source,
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
+                 mesh: Any, source: Any,
                  opts: StepOptions = StepOptions(),
-                 on_straggler: Optional[Callable[[int, float], None]] = None):
+                 on_straggler: Optional[Callable[[int, float],
+                                                 None]] = None) -> None:
         self.cfg, self.tcfg, self.mesh, self.source = cfg, tcfg, mesh, source
         self.opts = opts
         self.on_straggler = on_straggler
@@ -72,7 +74,7 @@ class Trainer:
         self.state = self._init_or_restore()
 
     # ------------------------------------------------------------------
-    def _init_or_restore(self):
+    def _init_or_restore(self) -> Any:
         state = init_train_state(jax.random.key(self.tcfg.seed), self.cfg,
                                  self.opts)
         if self._ckpt is not None and latest_step(self.tcfg.ckpt_dir) is not None:
@@ -85,7 +87,7 @@ class Trainer:
         return int(jax.device_get(self.state["step"]))
 
     # ------------------------------------------------------------------
-    def _watchdog(self, step: int, dt: float):
+    def _watchdog(self, step: int, dt: float) -> None:
         self._step_times.append(dt)
         if len(self._step_times) < 5:
             return
@@ -172,7 +174,8 @@ class StackTrainer:
     drawn deterministically per step so a fixed seed reproduces the run.
     """
 
-    def __init__(self, model, data, cfg: StackTrainerConfig = None):
+    def __init__(self, model: Any, data: Dict[str, Any],
+                 cfg: Optional[StackTrainerConfig] = None) -> None:
         import jax.numpy as jnp
 
         from repro.models.ffn import vikin_stack_apply, vikin_stack_init
@@ -191,7 +194,7 @@ class StackTrainer:
         use_labels = self.cfg.loss == "xent"
         impl, mdl = self.cfg.impl, self.model
 
-        def loss_fn(params, x, y):
+        def loss_fn(params: Any, x: Any, y: Any) -> Any:
             pred = vikin_stack_apply(params, x, mdl, impl=impl)
             pred = pred.astype(jnp.float32)
             if use_labels:
@@ -200,7 +203,8 @@ class StackTrainer:
                     jnp.take_along_axis(logp, y[:, None], axis=-1))
             return jnp.mean(jnp.square(pred - y))
 
-        def step_fn(params, opt, x, y):
+        def step_fn(params: Any, opt: Any, x: Any,
+                    y: Any) -> Tuple[Any, Any, Any, Any]:
             loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
             params, opt, om = adamw_update(grads, opt, params, acfg)
             return params, opt, loss, om["grad_norm"]
@@ -208,7 +212,7 @@ class StackTrainer:
         self._jit_step = jax.jit(step_fn)
         self._loss_fn = jax.jit(loss_fn)
 
-    def _batch_at(self, step: int):
+    def _batch_at(self, step: int) -> Tuple[np.ndarray, np.ndarray]:
         cfg = self.cfg
         n = self.data["train_x"].shape[0]
         rng = np.random.default_rng(cfg.seed * 100003 + step)
@@ -218,7 +222,8 @@ class StackTrainer:
              else self.data["train_y"][idx])
         return x, y
 
-    def evaluate(self, params=None, masks=None) -> Dict[str, float]:
+    def evaluate(self, params: Any = None,
+                 masks: Any = None) -> Dict[str, float]:
         """Val-set metrics; ``masks`` evaluates a sparsified stack.
 
         Regression reports val_mse; classification reports val_xent +

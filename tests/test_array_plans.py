@@ -31,7 +31,6 @@ import pytest
 from repro.configs.vikin_models import VIKIN_ARCHS
 from repro.core.engine import (
     RECONFIG_CYCLES,
-    LayerWork,
     VikinArray,
     mlp_layers,
     run_model,

@@ -4,7 +4,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 # importing repro.launch.dryrun sets XLA_FLAGS to force 512 host devices
 # (by design -- it must precede jax init in the dry-run process).  Force

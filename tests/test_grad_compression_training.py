@@ -1,6 +1,5 @@
 """int8 error-feedback gradient compression in the real train step."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs.registry import get_config

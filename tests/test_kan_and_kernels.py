@@ -1,5 +1,4 @@
 """KAN layer + kan_fused + pattern_matmul kernels vs oracles; sparsity."""
-import dataclasses
 
 from _hypothesis_fallback import hypothesis, st  # skips, not errors, when absent
 import jax
@@ -13,12 +12,10 @@ from repro.core.kan import (
     kan_apply,
     kan_init,
     kan_op_counts,
-    kan_reference_dense,
     kan_stack_apply,
 )
 from repro.core.modes import ExecMode, LayerKind, ModePlan
 from repro.core.sparsity import (
-    PatternMask,
     compact_rows,
     magnitude_mask,
     spline_nnz_rate,

@@ -7,7 +7,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import SHAPES
@@ -52,7 +51,7 @@ def test_bad_ffn_kinds_raise_named_error_at_construction():
     registry.get_serving_config used to hand such configs through)."""
     import dataclasses
 
-    from repro.configs.base import ArchConfig, ArchConfigError
+    from repro.configs.base import ArchConfigError
     from repro.configs.registry import KANFFN_ARCHS, get_serving_config
 
     good = KANFFN_ARCHS["kanffn-ci"]

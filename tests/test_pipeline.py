@@ -27,7 +27,7 @@ from repro.core.calibrate import (
     masked_pattern_rates,
 )
 from repro.data.stack_task import StackTaskConfig, load_stack_task
-from repro.models.ffn import vikin_stack_apply, vikin_stack_init
+from repro.models.ffn import vikin_stack_init
 from repro.runtime.backends import VikinBackend
 from repro.runtime.server import Engine
 from repro.runtime.trainer import StackTrainer, StackTrainerConfig

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_config
-from repro.data.lm import LMDataConfig, Prefetcher, SyntheticLM, make_source
+from repro.data.lm import LMDataConfig, Prefetcher, SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import StepOptions
 from repro.models import transformer as T

@@ -1,0 +1,405 @@
+"""vikinlint rule tests: each rule must fire on a seeded violation and
+stay silent on the real tree.
+
+The fixtures build tiny throwaway repo trees under tmp_path with exactly
+one planted contract violation each, inject fixture-scoped configuration
+(gate manifest, epilogue registry, report producers) through
+:class:`vikinlint.context.Context`, and assert the expected rule -- and
+only it -- fires at the expected location.  The clean-tree test then
+pins that the shipped repo passes with zero findings, which is what
+makes the CI job's exit status meaningful.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from vikinlint import run_paths                      # noqa: E402
+from vikinlint.context import Context                # noqa: E402
+from vikinlint.registry import EpilogueSite          # noqa: E402
+
+# A manifest shaped like check_regression.gate_manifest(), for fixtures.
+FIXTURE_MANIFEST = {
+    "BENCH_serving.json": {
+        "gates": [{"prefix": "sched:", "what": "w", "check": "c"},
+                  {"prefix": "", "what": "default", "check": "d"}],
+        "default_gated": True,
+        "required_baseline_prefixes": [],
+    },
+    "BENCH_kernels.json": {"all_rows_gated": True},
+}
+
+
+def _write(root: Path, rel: str, body: str) -> None:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(body))
+
+
+def _ctx(root: Path, **kw) -> Context:
+    kw.setdefault("gate_manifest", FIXTURE_MANIFEST)
+    kw.setdefault("epilogue_sites", ())
+    kw.setdefault("report_producers", ())
+    kw.setdefault("consumer_dirs", ("tests",))
+    return Context(root, ("src", "benchmarks"), **kw)
+
+
+def _findings(root: Path, **kw):
+    return run_paths(root, ("src", "benchmarks"), ctx=_ctx(root, **kw))
+
+
+# ---------------------------------------------------------------------------
+# VL001: bench-gate coverage
+# ---------------------------------------------------------------------------
+
+
+def test_vl001_fires_on_ungated_row(tmp_path):
+    _write(tmp_path, "benchmarks/fake_bench.py", """\
+        ARTIFACT = "BENCH_serving.json"
+
+        def run(archs):
+            results = {a: {"x": 1} for a in archs}
+            results[f"sched:{'+'.join(archs)}"] = {"ok": 1}
+            results[f"newrow:{archs[0]}"] = {"oops": 1}
+            return results
+        """)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL001"]
+    assert "newrow:" in fs[0].msg and fs[0].line == 6
+
+
+def test_vl001_dict_literal_keys_and_unknown_artifact(tmp_path):
+    _write(tmp_path, "benchmarks/other_bench.py", """\
+        ARTIFACT = "BENCH_mystery.json"
+
+        def run(arch):
+            rows = {f"whatever:{arch}": 1}
+            return rows
+        """)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL001"]
+    assert "BENCH_mystery.json" in fs[0].msg
+
+
+def test_vl001_default_gate_required_for_plain_rows(tmp_path):
+    _write(tmp_path, "benchmarks/plain_bench.py", """\
+        ARTIFACT = "BENCH_serving.json"
+
+        def run():
+            results = {}
+            results["plain-arch"] = {"x": 1}
+            return results
+        """)
+    manifest = {"BENCH_serving.json": {
+        "gates": [{"prefix": "sched:", "what": "w", "check": "c"}],
+        "default_gated": False, "required_baseline_prefixes": []}}
+    fs = _findings(tmp_path, gate_manifest=manifest)
+    assert [f.rule for f in fs] == ["VL001"]
+    assert "no default gate" in fs[0].msg
+
+
+# ---------------------------------------------------------------------------
+# VL002: shared-epilogue contract
+# ---------------------------------------------------------------------------
+
+FORKED_ORACLE = """\
+    import jax
+    import jax.numpy as jnp
+
+    def fake_ref(x, w, bias, act):
+        acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        # forked epilogue: re-implements bias+act inline
+        y = jax.nn.relu(acc + bias)
+        return y.astype(x.dtype)
+    """
+
+
+def test_vl002_fires_on_forked_epilogue(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/ref.py", FORKED_ORACLE)
+    sites = (EpilogueSite("src/repro/kernels/fake/ref.py", "fake_ref",
+                          "bias_act"),)
+    fs = _findings(tmp_path, epilogue_sites=sites)
+    assert [f.rule for f in fs] == ["VL002"]
+    assert "bias_act" in fs[0].msg and fs[0].line == 4
+
+
+def test_vl002_requires_the_import_not_a_shadow(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/ref.py", """\
+        import jax.numpy as jnp
+
+        def bias_act(acc, bias, act, dt):   # local shadow, not the shared one
+            return (acc + bias).astype(dt)
+
+        def fake_ref(x, w, bias):
+            acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+            return bias_act(acc, bias, None, x.dtype)
+        """)
+    sites = (EpilogueSite("src/repro/kernels/fake/ref.py", "fake_ref",
+                          "bias_act"),)
+    fs = _findings(tmp_path, epilogue_sites=sites)
+    assert [f.rule for f in fs] == ["VL002"]
+    assert "not imported" in fs[0].msg
+
+
+def test_vl002_flags_acts_subscript_outside_epilogue(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/ops.py", """\
+        from repro.kernels.epilogue import ACTS
+
+        def sneaky(y, act):
+            return ACTS[act](y)
+        """)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL002"]
+    assert "ACTS" in fs[0].msg
+
+
+def test_vl002_clean_site_passes(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/ref.py", """\
+        import jax.numpy as jnp
+        from repro.kernels.epilogue import bias_act
+
+        def fake_ref(x, w, bias, act):
+            acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+            return bias_act(acc, bias, act, x.dtype)
+        """)
+    sites = (EpilogueSite("src/repro/kernels/fake/ref.py", "fake_ref",
+                          "bias_act"),)
+    assert _findings(tmp_path, epilogue_sites=sites) == []
+
+
+# ---------------------------------------------------------------------------
+# VL003: trace purity
+# ---------------------------------------------------------------------------
+
+JITTED_TIMER = """\
+    import functools
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+
+    @functools.partial(jax.jit, static_argnames=())
+    def apply_fn(x):
+        t0 = time.time()
+        return x * t0
+    """
+
+
+def test_vl003_fires_on_time_in_jitted_path(tmp_path):
+    _write(tmp_path, "src/repro/models/fake.py", JITTED_TIMER)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL003"]
+    assert "time.time" in fs[0].msg and fs[0].line == 10
+
+
+def test_vl003_follows_the_call_graph(tmp_path):
+    # the violation sits two hops below the entry point, in another module
+    _write(tmp_path, "src/repro/models/entry.py", """\
+        from repro.models.helper import middle
+
+        def vikin_stack_apply(params, x, model):
+            return middle(x)
+        """)
+    _write(tmp_path, "src/repro/models/helper.py", """\
+        import numpy as np
+
+        def middle(x):
+            return leaf(x)
+
+        def leaf(x):
+            return x + np.random.rand()
+        """)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL003"]
+    assert "np.random" in fs[0].msg and "leaf" in fs[0].msg
+
+
+def test_vl003_flags_branch_on_traced_array(tmp_path):
+    _write(tmp_path, "src/repro/models/brancher.py", """\
+        import jax.numpy as jnp
+
+        def vikin_stack_apply(params, x, model):
+            if jnp.max(x) > 0:
+                return x
+            return -x
+        """)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL003"]
+    assert "jnp.max" in fs[0].msg
+
+
+def test_vl003_ignores_unreachable_host_code(tmp_path):
+    _write(tmp_path, "src/repro/runtime/host.py", """\
+        import time
+
+        def wall_clock_loop():
+            return time.perf_counter()
+        """)
+    assert _findings(tmp_path) == []
+
+
+def test_vl003_allows_seeded_rng(tmp_path):
+    _write(tmp_path, "src/repro/models/seeded.py", """\
+        import numpy as np
+
+        def vikin_stack_apply(params, x, model):
+            rng = np.random.default_rng(0)
+            return x
+        """)
+    assert _findings(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# VL004: dtype discipline
+# ---------------------------------------------------------------------------
+
+
+def test_vl004_fires_on_unpinned_dot(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/kern.py", """\
+        import jax.numpy as jnp
+
+        def kern_ref(x, w):
+            return jnp.dot(x, w)
+        """)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL004"]
+    assert "preferred_element_type" in fs[0].msg and fs[0].line == 4
+
+
+def test_vl004_ignores_non_kernel_code_and_pinned_dots(tmp_path):
+    _write(tmp_path, "src/repro/models/mod.py", """\
+        import jax.numpy as jnp
+
+        def host_side(x, w):
+            return jnp.dot(x, w)     # not under kernels/: out of scope
+        """)
+    _write(tmp_path, "src/repro/kernels/fake/kern.py", """\
+        import jax.numpy as jnp
+
+        def kern_ref(x, w):
+            return jnp.dot(x, w, preferred_element_type=jnp.float32)
+        """)
+    assert _findings(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# VL005: report-field drift
+# ---------------------------------------------------------------------------
+
+PRODUCER = """\
+    def make_report(cycles):
+        out = {"sim_cycles": float(cycles)}
+        out["dma_bytes"] = 4.0
+        out.update(orphan_field=1.0)
+        return out
+    """
+
+
+def test_vl005_fires_on_unconsumed_field(tmp_path):
+    _write(tmp_path, "src/repro/core/rep.py", PRODUCER)
+    _write(tmp_path, "tests/test_consumer.py", """\
+        def test_uses_report():
+            rep = {"sim_cycles": 1.0, "dma_bytes": 2.0}
+            assert rep["sim_cycles"] + rep["dma_bytes"]
+        """)
+    producers = (("src/repro/core/rep.py", "make_report"),)
+    fs = _findings(tmp_path, report_producers=producers)
+    assert [f.rule for f in fs] == ["VL005"]
+    assert "orphan_field" in fs[0].msg
+
+
+def test_vl005_stale_registration_is_a_finding(tmp_path):
+    _write(tmp_path, "src/repro/core/rep.py", "X = 1\n")
+    producers = (("src/repro/core/rep.py", "vanished_report"),)
+    fs = _findings(tmp_path, report_producers=producers)
+    assert [f.rule for f in fs] == ["VL005"]
+    assert "no longer exists" in fs[0].msg
+
+
+# ---------------------------------------------------------------------------
+# Suppression + CLI + clean tree
+# ---------------------------------------------------------------------------
+
+
+def test_disable_comment_suppresses_on_the_line(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/kern.py", """\
+        import jax.numpy as jnp
+
+        def kern_ref(x, w):
+            return jnp.dot(x, w)  # vikinlint: disable=VL004
+        """)
+    assert _findings(tmp_path) == []
+
+
+def test_disable_file_comment_suppresses_whole_file(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/kern.py", """\
+        # vikinlint: disable-file=VL004
+        import jax.numpy as jnp
+
+        def kern_ref(x, w):
+            return jnp.dot(x, w)
+
+        def kern_ref2(x, w):
+            return jnp.matmul(x, w)
+        """)
+    assert _findings(tmp_path) == []
+
+
+def test_disable_comment_other_rule_does_not_suppress(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/kern.py", """\
+        import jax.numpy as jnp
+
+        def kern_ref(x, w):
+            return jnp.dot(x, w)  # vikinlint: disable=VL001
+        """)
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL004"]
+
+
+def test_syntax_error_is_reported_not_crashed(tmp_path):
+    _write(tmp_path, "src/repro/models/broken.py", "def f(:\n")
+    fs = _findings(tmp_path)
+    assert [f.rule for f in fs] == ["VL000"]
+
+
+def test_list_gates_manifest_shape():
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--list-gates"],
+        capture_output=True, text=True, check=True, cwd=ROOT)
+    man = json.loads(out.stdout)
+    serving = man["BENCH_serving.json"]
+    prefixes = {g["prefix"] for g in serving["gates"]}
+    assert {"sched:", "openloop:sweep:", "openloop:burst:", "pipe:",
+            "hetero:", "sharded:", "quant:", "kanffn:", "trained:",
+            ""} <= prefixes
+    assert serving["default_gated"] is True
+    assert set(serving["required_baseline_prefixes"]) == {
+        "sharded:", "openloop:", "pipe:", "hetero:"}
+    assert man["BENCH_kernels.json"]["all_rows_gated"] is True
+
+
+def test_real_tree_is_clean():
+    """The shipped repo passes every rule -- the CI job's green state."""
+    assert run_paths(ROOT, ("src", "benchmarks")) == []
+
+
+def test_cli_smoke(tmp_path):
+    _write(tmp_path, "src/repro/kernels/fake/kern.py", """\
+        import jax.numpy as jnp
+
+        def kern_ref(x, w):
+            return jnp.dot(x, w)
+        """)
+    env = {"PYTHONPATH": str(ROOT / "tools"), "PATH": "/usr/bin:/bin"}
+    r = subprocess.run(
+        [sys.executable, "-m", "vikinlint", "src", "--root",
+         str(tmp_path), "--rules", "VL004"],
+        capture_output=True, text=True, env=env)
+    assert r.returncode == 1
+    assert "VL004" in r.stdout and "kern.py:4" in r.stdout

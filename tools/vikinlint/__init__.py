@@ -1,0 +1,32 @@
+"""vikinlint: repo-contract static analysis for the VIKIN repro.
+
+Generic linters check style; this package checks the *contracts* the repo's
+correctness story depends on -- the things a reviewer has to hold in their
+head today and a future PR can silently break:
+
+=======  ==========================================================
+VL001    every bench-emitted artifact row has a regression gate
+VL002    kernel / fallback / oracle trios share ONE epilogue
+VL003    nothing impure is reachable from a jitted entry point
+VL004    every contraction in a kernel pins its accumulator dtype
+VL005    every report field is consumed by a test or bench gate
+=======  ==========================================================
+
+Pure stdlib (``ast`` + file walking): it must run in the leanest CI
+container before any heavy import.  Run from the repo root::
+
+    PYTHONPATH=tools python -m vikinlint src benchmarks
+
+Suppression: append ``# vikinlint: disable=VL00X`` to the flagged line,
+or place ``# vikinlint: disable-file=VL00X`` on its own line for file
+scope.  Every suppression should cite a reason in an adjacent comment --
+the escape hatch exists for false positives, not for skipping fixes.
+"""
+from __future__ import annotations
+
+from vikinlint.context import Context, Finding
+from vikinlint.cli import main, run_paths
+
+__version__ = "0.1.0"
+
+__all__ = ["Context", "Finding", "main", "run_paths", "__version__"]

@@ -1,0 +1,6 @@
+"""``python -m vikinlint`` entry point."""
+import sys
+
+from vikinlint.cli import main
+
+sys.exit(main())

@@ -1,0 +1,100 @@
+"""Command-line front end: discovery, rule running, reporting.
+
+``python -m vikinlint [paths...]`` lints the given repo-relative paths
+(default: ``src benchmarks``) from the current repo root, prints
+``path:line: RULE message`` diagnostics, and exits 1 when any finding
+survives suppression.  When ``$GITHUB_STEP_SUMMARY`` is set (CI), a
+markdown table of the findings is appended there, mirroring the bench
+drift table.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from vikinlint.context import Context, Finding
+
+
+def run_paths(root: Path, paths: Sequence[str],
+              rule_ids: Optional[Sequence[str]] = None,
+              ctx: Optional[Context] = None) -> List[Finding]:
+    """Lint ``paths`` under ``root`` and return unsuppressed findings.
+
+    ``ctx`` overrides the default context (tests inject fixture trees
+    with custom registries/manifests).
+    """
+    from vikinlint.rules import ALL_RULES, RULES_BY_ID
+    if ctx is None:
+        ctx = Context(root, paths)
+    rules = (ALL_RULES if rule_ids is None
+             else [RULES_BY_ID[r] for r in rule_ids])
+    findings: List[Finding] = []
+    for sf in ctx.files.values():
+        if sf.parse_error is not None:
+            findings.append(Finding(
+                "VL000", sf.rel, sf.parse_error.lineno or 1,
+                f"syntax error: {sf.parse_error.msg}"))
+    for rule in rules:
+        for f in rule.run(ctx):
+            sf = ctx.file(f.path)
+            if sf is not None and sf.suppressed(f):
+                continue
+            findings.append(f)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def _step_summary(findings: List[Finding], checked: int) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [f"## vikinlint — "
+             + ("PASS" if not findings else f"FAIL ({len(findings)} "
+                                            f"finding(s))"),
+             ""]
+    if findings:
+        lines += ["| location | rule | message |", "|---|---|---|"]
+        lines += [f"| `{f.path}:{f.line}` | {f.rule} | {f.msg} |"
+                  for f in findings]
+    else:
+        lines.append(f"{checked} files clean.")
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from vikinlint.rules import ALL_RULES
+    ap = argparse.ArgumentParser(
+        prog="vikinlint",
+        description="repo-contract static analysis for the VIKIN repro")
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="repo-relative paths to lint "
+                         "(default: src benchmarks)")
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: cwd)")
+    ap.add_argument("--rules",
+                    help="comma-separated rule IDs to run "
+                         "(default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for r in ALL_RULES:
+            doc = (r.__doc__ or "").strip().splitlines()[0]
+            print(f"{r.id} {r.name}: {doc}")
+        return 0
+    rule_ids = args.rules.split(",") if args.rules else None
+    root = Path(args.root).resolve()
+    findings = run_paths(root, args.paths or ["src", "benchmarks"],
+                         rule_ids)
+    for f in findings:
+        print(f)
+    ctx_files = sum(1 for p in (args.paths or ["src", "benchmarks"])
+                    for _ in (root / p).rglob("*.py"))
+    _step_summary(findings, ctx_files)
+    if findings:
+        print(f"vikinlint: {len(findings)} finding(s)")
+        return 1
+    print(f"vikinlint: clean ({ctx_files} files)")
+    return 0

@@ -1,0 +1,226 @@
+"""Shared analysis context: file discovery, parsing, suppression.
+
+A :class:`Context` is built once per lint run (or per test fixture) and
+handed to every rule.  It owns the parsed ASTs, the repo-specific
+configuration rules consume (epilogue registry, jit entry points, report
+producers, the bench-gate manifest), and the ``# vikinlint: disable=``
+bookkeeping the CLI applies after rules report.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+# ``# vikinlint: disable=VL001`` (same line) / ``disable-file=`` (whole file)
+_DISABLE_RE = re.compile(
+    r"#\s*vikinlint:\s*disable(?P<scope>-file)?\s*=\s*"
+    r"(?P<rules>VL\d{3}(?:\s*,\s*VL\d{3})*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: ``path:line: RULE message``."""
+
+    rule: str
+    path: str          # repo-relative, posix separators
+    line: int
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+class SourceFile:
+    """One parsed source file plus its suppression directives."""
+
+    def __init__(self, root: Path, path: Path) -> None:
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.tree: Optional[ast.Module] = None
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(self.text, filename=str(path))
+        except SyntaxError as e:  # surfaced as a finding by the CLI
+            self.parse_error = e
+        self.line_disables: Dict[int, set] = {}
+        self.file_disables: set = set()
+        for lineno, line in enumerate(self.text.splitlines(), start=1):
+            m = _DISABLE_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",")}
+            if m.group("scope"):
+                self.file_disables |= rules
+            else:
+                self.line_disables.setdefault(lineno, set()).update(rules)
+
+    def suppressed(self, f: Finding) -> bool:
+        return (f.rule in self.file_disables
+                or f.rule in self.line_disables.get(f.line, ()))
+
+
+def _default_gate_manifest(root: Path) -> Dict[str, Any]:
+    """The live gate registry from ``benchmarks.check_regression``.
+
+    Imported in-process when the repo root is importable (it is under
+    ``python -m vikinlint`` from the root); falls back to the
+    ``--list-gates`` subprocess so the linter also works from elsewhere.
+    """
+    sys.path.insert(0, str(root))
+    try:
+        from benchmarks.check_regression import gate_manifest
+        return gate_manifest()
+    except ImportError:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.check_regression",
+             "--list-gates"],
+            capture_output=True, text=True, check=True, cwd=root)
+        return json.loads(out.stdout)
+    finally:
+        sys.path.remove(str(root))
+
+
+class Context:
+    """Everything a rule needs: files, ASTs, and repo configuration.
+
+    ``gate_manifest``, ``epilogue_sites``, ``entry_point_names`` and
+    ``report_producers`` default to the live repo configuration
+    (``vikinlint.registry``) and are injectable so the test suite can lint
+    seeded-violation fixture trees.
+    """
+
+    def __init__(
+        self,
+        root: Path,
+        paths: Sequence[str] = ("src", "benchmarks"),
+        *,
+        gate_manifest: Optional[Dict[str, Any]] = None,
+        epilogue_sites: Optional[Sequence] = None,
+        entry_point_names: Optional[Sequence[str]] = None,
+        report_producers: Optional[Sequence[Tuple[str, str]]] = None,
+        consumer_dirs: Optional[Sequence[str]] = None,
+    ) -> None:
+        from vikinlint import registry
+        self.root = Path(root).resolve()
+        self.files: Dict[str, SourceFile] = {}
+        for p in paths:
+            base = self.root / p
+            if base.is_file() and base.suffix == ".py":
+                sf = SourceFile(self.root, base)
+                self.files[sf.rel] = sf
+                continue
+            for f in sorted(base.rglob("*.py")):
+                sf = SourceFile(self.root, f)
+                self.files[sf.rel] = sf
+        self._gate_manifest = gate_manifest
+        self.epilogue_sites = (registry.EPILOGUE_SITES
+                               if epilogue_sites is None else
+                               tuple(epilogue_sites))
+        self.entry_point_names = (registry.ENTRY_POINT_NAMES
+                                  if entry_point_names is None else
+                                  tuple(entry_point_names))
+        self.report_producers = (registry.REPORT_PRODUCERS
+                                 if report_producers is None else
+                                 tuple(report_producers))
+        self.consumer_dirs = (registry.CONSUMER_DIRS
+                              if consumer_dirs is None else
+                              tuple(consumer_dirs))
+
+    def gate_manifest(self) -> Dict[str, Any]:
+        if self._gate_manifest is None:
+            self._gate_manifest = _default_gate_manifest(self.root)
+        return self._gate_manifest
+
+    def files_under(self, prefix: str) -> List[SourceFile]:
+        """Parsed files whose repo-relative path starts with ``prefix``."""
+        return [sf for rel, sf in sorted(self.files.items())
+                if rel.startswith(prefix) and sf.tree is not None]
+
+    def file(self, rel: str) -> Optional[SourceFile]:
+        return self.files.get(rel)
+
+    def consumer_texts(self) -> List[str]:
+        """Raw text of every file findings may be 'consumed' by (VL005):
+        the test suite and the bench/gate layer, read from disk so the
+        consumer set does not depend on which paths were linted."""
+        texts = []
+        for d in self.consumer_dirs:
+            base = self.root / d
+            if not base.exists():
+                continue
+            for f in sorted(base.rglob("*.py")):
+                texts.append(f.read_text())
+        return texts
+
+
+def iter_calls(tree: ast.AST) -> Iterable[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def module_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local alias -> imported module ('np' -> 'numpy', 'jnp' ->
+    'jax.numpy'); plain imports map themselves ('time' -> 'time')."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                # only module-like targets matter for alias resolution
+                out.setdefault(a.asname or a.name,
+                               f"{node.module}.{a.name}")
+    return out
+
+
+def imported_symbols(tree: ast.Module) -> Dict[str, Tuple[str, str]]:
+    """Local name -> (source module, original name) for from-imports."""
+    out: Dict[str, Tuple[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = (node.module, a.name)
+    return out
+
+
+def functions_with_qualnames(
+        tree: ast.Module) -> List[Tuple[str, ast.AST]]:
+    """Every (qualname, FunctionDef/AsyncFunctionDef) in the module,
+    including methods ('Class.method') and nested defs ('outer.inner')."""
+    out: List[Tuple[str, ast.AST]] = []
+
+    def visit(node: ast.AST, stack: Tuple[str, ...]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = ".".join(stack + (child.name,))
+                out.append((q, child))
+                visit(child, stack + (child.name,))
+            elif isinstance(child, ast.ClassDef):
+                visit(child, stack + (child.name,))
+            else:
+                visit(child, stack)
+
+    visit(tree, ())
+    return out

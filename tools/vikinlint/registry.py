@@ -1,0 +1,79 @@
+"""Repo-specific configuration the rules consume.
+
+This is the one file to edit when the repo grows:
+
+* a new Pallas kernel with a bias/act epilogue -> add its kernel /
+  fallback / oracle sites to ``EPILOGUE_SITES`` (VL002),
+* a new jitted entry point -> add its name to ``ENTRY_POINT_NAMES``
+  (VL003; jit-decorated functions and ``pl.pallas_call`` bodies are
+  discovered automatically),
+* a new report-producing function -> add it to ``REPORT_PRODUCERS``
+  (VL005).
+
+VL001 needs no registration: it reads the live gate registry from
+``benchmarks.check_regression --list-gates``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSite:
+    """One function that MUST apply the shared epilogue by calling the
+    named function imported from ``repro.kernels.epilogue``.
+
+    Sites come in trios (Pallas kernel, XLA fallback branch, dense
+    oracle); listing each side separately keeps the check per-function
+    and the diagnostics precise.
+    """
+
+    path: str       # repo-relative file
+    func: str       # function qualname within the file
+    epilogue: str   # required epilogue function name
+
+
+# The pattern_matmul family is the only kernel group with a bias/act
+# epilogue today (kan_fused kernels end in a bare accumulator cast).  The
+# f32 trio shares ``bias_act``; the q8 pair applies ``scale_bias_act``
+# outside the kernel (the kernel emits the RAW integer accumulator by
+# contract -- DESIGN.md Sec. 16), so the wrapper is the registered site.
+EPILOGUE_SITES: Tuple[EpilogueSite, ...] = (
+    EpilogueSite("src/repro/kernels/pattern_matmul/pattern_matmul.py",
+                 "_mm_kernel", "bias_act"),
+    EpilogueSite("src/repro/kernels/pattern_matmul/ops.py",
+                 "pattern_linear", "bias_act"),
+    EpilogueSite("src/repro/kernels/pattern_matmul/ref.py",
+                 "pattern_matmul_ref", "bias_act"),
+    EpilogueSite("src/repro/kernels/pattern_matmul/ops.py",
+                 "pattern_linear_q8", "scale_bias_act"),
+)
+
+# Functions whose BARE NAME marks them as jitted entry points for VL003's
+# reachability walk, on top of the automatically discovered ones
+# (``@jax.jit``-decorated functions and ``pl.pallas_call`` kernel bodies):
+# the model-stack apply and the transformer forward are jitted by their
+# callers, and backend ``forward``/``forward_fn`` bodies build the traced
+# compute.
+ENTRY_POINT_NAMES: Tuple[str, ...] = (
+    "vikin_stack_apply",
+    "forward",
+    "forward_fn",
+)
+
+# (file, function) pairs whose emitted report keys must each be consumed
+# by at least one test or bench file (VL005).  The private helpers are
+# listed because their dicts ARE serving_report's return value for the
+# pipeline/hetero array plans.
+REPORT_PRODUCERS: Tuple[Tuple[str, str], ...] = (
+    ("src/repro/core/engine.py", "serving_report"),
+    ("src/repro/core/engine.py", "_pipeline_report"),
+    ("src/repro/core/engine.py", "_hetero_report"),
+    ("src/repro/runtime/backends.py", "TransformerBackend.batch_report"),
+    ("src/repro/runtime/backends.py",
+     "TransformerBackend.cycle_attribution"),
+)
+
+# Where VL005 looks for consumers.
+CONSUMER_DIRS: Tuple[str, ...] = ("tests", "benchmarks")

@@ -1,0 +1,22 @@
+"""Rule registry: every rule module exports one ``Rule`` class."""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from vikinlint.rules.vl001_bench_gates import VL001BenchGateCoverage
+from vikinlint.rules.vl002_epilogue import VL002SharedEpilogue
+from vikinlint.rules.vl003_trace_purity import VL003TracePurity
+from vikinlint.rules.vl004_dtype import VL004DtypeDiscipline
+from vikinlint.rules.vl005_report_fields import VL005ReportFieldDrift
+
+ALL_RULES = (
+    VL001BenchGateCoverage,
+    VL002SharedEpilogue,
+    VL003TracePurity,
+    VL004DtypeDiscipline,
+    VL005ReportFieldDrift,
+)
+
+RULES_BY_ID: Dict[str, Type] = {r.id: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_ID"]

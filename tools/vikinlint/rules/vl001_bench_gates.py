@@ -1,0 +1,148 @@
+"""VL001: every bench-emitted artifact row must have a regression gate.
+
+The benches write rows into ``BENCH_*.json`` artifacts;
+``benchmarks.check_regression`` gates those artifacts against the
+committed baselines by row-key prefix.  A bench that starts emitting a
+new ``newthing:`` row family without a matching gate produces numbers CI
+uploads but never checks -- a coverage hole that historically went
+unnoticed until a regression shipped.
+
+This rule cross-parses the two sides:
+
+* **emitted** rows: in every ``benchmarks/*_bench.py`` module, string /
+  f-string keys written into the conventional result mappings
+  (``results[...] = row``, ``rows = {f"pfx:{a}": ...}``) of the module
+  that owns a ``BENCH_*.json`` artifact.  An f-string key contributes its
+  leading literal (``f"pipe:{arch}"`` -> ``pipe:``); a non-literal key
+  (e.g. a dict comprehension over arch names) contributes the empty
+  prefix.
+* **gated** prefixes: the machine-readable manifest from
+  ``python -m benchmarks.check_regression --list-gates``.
+
+A prefixed row pattern must start with some explicit (non-default) gate
+prefix; unprefixed patterns require the manifest's ``default_gated``
+flag; artifacts marked ``all_rows_gated`` (the kernels walk) pass
+wholesale.  An emitted artifact with no manifest entry at all fails.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Tuple
+
+from vikinlint.context import Context, Finding
+
+# Mapping variables conventionally holding artifact rows in bench modules.
+RESULT_NAMES = frozenset({"results", "rows"})
+
+_ARTIFACT_RE = re.compile(r"^BENCH_\w+\.json$")
+
+
+def _artifact_name(tree: ast.Module) -> Optional[str]:
+    """The module's artifact: an ``ARTIFACT = "BENCH_x.json"`` constant,
+    else the first BENCH_*.json string literal anywhere."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Name) and t.id == "ARTIFACT"
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, str)):
+                    return node.value.value
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Constant) and isinstance(node.value, str)
+                and _ARTIFACT_RE.match(node.value)):
+            return node.value
+    return None
+
+
+def _key_pattern(key: ast.expr) -> Tuple[str, bool]:
+    """(pattern, is_literal) for a row-key expression.
+
+    Literal strings return themselves; f-strings return their leading
+    literal up to the first interpolation; anything else is the empty
+    pattern (resolvable only by the default gate).
+    """
+    if isinstance(key, ast.Constant) and isinstance(key.value, str):
+        return key.value, True
+    if isinstance(key, ast.JoinedStr):
+        lead = []
+        for part in key.values:
+            if isinstance(part, ast.Constant) and isinstance(part.value,
+                                                             str):
+                lead.append(part.value)
+            else:
+                break
+        return "".join(lead), False
+    return "", False
+
+
+def _emitted_rows(tree: ast.Module) -> List[Tuple[int, str]]:
+    """(line, pattern) for every row key written into a result mapping."""
+    out: List[Tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id in RESULT_NAMES):
+                    pat, _ = _key_pattern(t.slice)
+                    out.append((t.lineno, pat))
+                elif (isinstance(t, ast.Name) and t.id in RESULT_NAMES
+                      and isinstance(node.value, (ast.Dict, ast.DictComp))):
+                    v = node.value
+                    if isinstance(v, ast.Dict):
+                        for k in v.keys:
+                            if k is None:      # {**spread}: carried rows
+                                continue
+                            pat, _ = _key_pattern(k)
+                            out.append((k.lineno, pat))
+                    else:
+                        pat, _ = _key_pattern(v.key)
+                        out.append((v.key.lineno, pat))
+    return out
+
+
+class VL001BenchGateCoverage:
+    """Bench rows without a check_regression gate."""
+
+    id = "VL001"
+    name = "bench-gate-coverage"
+
+    @classmethod
+    def run(cls, ctx: Context) -> List[Finding]:
+        findings: List[Finding] = []
+        benches = [sf for sf in ctx.files_under("benchmarks")
+                   if sf.rel.endswith("_bench.py")]
+        if not benches:
+            return findings
+        manifest = ctx.gate_manifest()
+        for sf in benches:
+            artifact = _artifact_name(sf.tree)
+            if artifact is None:
+                continue            # bench writes no gated artifact
+            spec = manifest.get(artifact)
+            if spec is None:
+                findings.append(Finding(
+                    cls.id, sf.rel, 1,
+                    f"emits {artifact} but check_regression has no gate "
+                    f"entry for that artifact"))
+                continue
+            if spec.get("all_rows_gated"):
+                continue
+            explicit = [g["prefix"] for g in spec.get("gates", ())
+                        if g["prefix"]]
+            default_gated = bool(spec.get("default_gated"))
+            for line, pat in _emitted_rows(sf.tree):
+                if ":" in pat:
+                    if not any(pat.startswith(g) for g in explicit):
+                        findings.append(Finding(
+                            cls.id, sf.rel, line,
+                            f"row key '{pat}*' written to {artifact} has "
+                            f"no check_regression gate (known prefixes: "
+                            f"{', '.join(explicit)})"))
+                elif not default_gated:
+                    findings.append(Finding(
+                        cls.id, sf.rel, line,
+                        f"unprefixed row written to {artifact} but the "
+                        f"gate registry has no default gate"))
+        return findings

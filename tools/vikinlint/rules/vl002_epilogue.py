@@ -1,0 +1,108 @@
+"""VL002: kernel / fallback / oracle trios must share ONE epilogue.
+
+The repo's bitwise kernel==oracle contract (DESIGN.md Secs. 16-17)
+requires both sides of every kernel/oracle pair to apply the scale /
+bias / activation epilogue through the SAME imported function
+(``repro.kernels.epilogue``), in the same order, on the f32 accumulator.
+Re-implementing the math inline is how single-rounding FMA divergences
+creep in: the fused kernel computes ``act(acc*s + b)`` in one rounding
+while the eager oracle rounds twice, and the "bitwise identical" tests
+only catch it on inputs that land near a rounding boundary.
+
+Checks:
+
+* every registered :class:`~vikinlint.registry.EpilogueSite` (kernel
+  body, XLA fallback branch, dense oracle) contains a call to its
+  required epilogue function, and that name is imported from
+  ``repro.kernels.epilogue`` (not shadowed by a local def);
+* the ``ACTS`` activation table is never subscripted outside
+  ``epilogue.py`` -- applying ``ACTS[act](...)`` by hand is the tell
+  that an epilogue got forked inline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from vikinlint.context import Context, Finding, functions_with_qualnames
+
+EPILOGUE_MODULE = "repro.kernels.epilogue"
+
+
+def _imports_from_epilogue(tree: ast.Module, name: str) -> bool:
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.ImportFrom)
+                and node.module == EPILOGUE_MODULE
+                and any((a.asname or a.name) == name for a in node.names)):
+            return True
+    return False
+
+
+def _calls_name(fn: ast.AST, name: str) -> bool:
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == name):
+            return True
+    return False
+
+
+def _find_func(tree: ast.Module, qualname: str) -> Optional[ast.AST]:
+    for q, node in functions_with_qualnames(tree):
+        if q == qualname:
+            return node
+    return None
+
+
+class VL002SharedEpilogue:
+    """Kernel/oracle epilogue forks."""
+
+    id = "VL002"
+    name = "shared-epilogue-contract"
+
+    @classmethod
+    def run(cls, ctx: Context) -> List[Finding]:
+        findings: List[Finding] = []
+        for site in ctx.epilogue_sites:
+            sf = ctx.file(site.path)
+            if sf is None or sf.tree is None:
+                findings.append(Finding(
+                    cls.id, site.path, 1,
+                    f"registered epilogue site {site.func} not found "
+                    f"(file missing from lint set); update "
+                    f"tools/vikinlint/registry.py"))
+                continue
+            fn = _find_func(sf.tree, site.func)
+            if fn is None:
+                findings.append(Finding(
+                    cls.id, sf.rel, 1,
+                    f"registered epilogue site {site.func} no longer "
+                    f"exists; update tools/vikinlint/registry.py"))
+                continue
+            if not _calls_name(fn, site.epilogue):
+                findings.append(Finding(
+                    cls.id, sf.rel, fn.lineno,
+                    f"{site.func} must apply the shared epilogue by "
+                    f"calling {site.epilogue}() from {EPILOGUE_MODULE}; "
+                    f"inlining the math forks the bitwise contract"))
+                continue
+            if not _imports_from_epilogue(sf.tree, site.epilogue):
+                findings.append(Finding(
+                    cls.id, sf.rel, fn.lineno,
+                    f"{site.func} calls {site.epilogue}() but the name is "
+                    f"not imported from {EPILOGUE_MODULE} -- a local "
+                    f"re-implementation shadows the shared epilogue"))
+        # Inline-fork tell: ACTS[...] outside the epilogue module.
+        for sf in ctx.files_under("src/repro/kernels"):
+            if sf.rel.endswith("/epilogue.py"):
+                continue
+            for node in ast.walk(sf.tree):
+                if (isinstance(node, ast.Subscript)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "ACTS"):
+                    findings.append(Finding(
+                        cls.id, sf.rel, node.lineno,
+                        "ACTS[...] subscripted outside "
+                        f"{EPILOGUE_MODULE}: apply activations through "
+                        "bias_act()/scale_bias_act(), never by hand"))
+        return findings

@@ -1,0 +1,254 @@
+"""VL003: nothing impure may be reachable from a jitted entry point.
+
+Code that runs under ``jax.jit`` (or inside a Pallas kernel) executes at
+TRACE time, once, and is then replayed as a cached computation.  Impure
+constructs silently freeze or corrupt the trace instead of failing:
+
+* ``time.*`` calls capture the tracing wall clock as a constant,
+* unseeded stdlib ``random`` / legacy ``np.random.*`` global-RNG calls
+  bake one draw into the compiled program (and break replayability),
+* ``global`` mutation runs once per trace, not once per call,
+* a Python ``if``/``while`` on an array-valued expression either raises
+  a ``TracerBoolConversionError`` at runtime or -- when the value is
+  concrete by accident -- specializes the trace to one input.
+
+The rule builds a call graph over the linted ``src`` tree (same-module
+calls, from-imports, module-alias attributes, ``self.`` methods) and
+walks it from the jitted entry points: functions named in
+``registry.ENTRY_POINT_NAMES``, ``@jax.jit``-decorated functions
+(including ``functools.partial(jax.jit, ...)``), and kernel bodies
+passed to ``pl.pallas_call``.  Every function reachable from those
+roots is scanned for the four violation classes.
+
+Seeded randomness (``np.random.default_rng(seed)``, ``jax.random`` with
+explicit keys) is allowed everywhere; wall-clock and RNG use in
+*unreachable* host code (servers, trainers, benches) is none of this
+rule's business.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from vikinlint.context import (Context, Finding, dotted_name,
+                               functions_with_qualnames, imported_symbols,
+                               module_aliases)
+
+# Legacy-free numpy.random constructors that carry an explicit seed.
+_NP_RANDOM_OK = frozenset({"default_rng", "Generator", "SeedSequence",
+                           "PCG64", "Philox"})
+
+FuncKey = Tuple[str, str]          # (module name, qualname)
+
+
+def _module_name(rel: str) -> str:
+    parts = rel[:-3].split("/")    # strip .py
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    d = dotted_name(dec)
+    if d and (d == "jit" or d.endswith(".jit")):
+        return True
+    if isinstance(dec, ast.Call):
+        d = dotted_name(dec.func)
+        if d and (d == "jit" or d.endswith(".jit")):
+            return True
+        # functools.partial(jax.jit, static_argnames=...)
+        if d and d.endswith("partial") and dec.args:
+            a0 = dotted_name(dec.args[0])
+            if a0 and (a0 == "jit" or a0.endswith(".jit")):
+                return True
+    return False
+
+
+def _pallas_body_names(tree: ast.Module) -> Set[str]:
+    """Local function names passed (possibly via functools.partial) as
+    the kernel body to ``pl.pallas_call``."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted_name(node.func)
+        if not (d and d.endswith("pallas_call") and node.args):
+            continue
+        body = node.args[0]
+        if isinstance(body, ast.Call):   # functools.partial(fn, ...)
+            if body.args and isinstance(body.args[0], ast.Name):
+                out.add(body.args[0].id)
+        elif isinstance(body, ast.Name):
+            out.add(body.id)
+    return out
+
+
+class _Graph:
+    """Static call graph over the linted src modules."""
+
+    def __init__(self, ctx: Context) -> None:
+        self.funcs: Dict[FuncKey, Tuple[object, ast.AST]] = {}
+        self.by_module: Dict[str, Dict[str, ast.AST]] = {}
+        self.aliases: Dict[str, Dict[str, str]] = {}
+        self.symbols: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        self.entries: Set[FuncKey] = set()
+        for sf in ctx.files_under("src"):
+            mod = _module_name(sf.rel)
+            qnames = functions_with_qualnames(sf.tree)
+            self.by_module[mod] = {q: n for q, n in qnames}
+            self.aliases[mod] = module_aliases(sf.tree)
+            self.symbols[mod] = imported_symbols(sf.tree)
+            pallas_bodies = _pallas_body_names(sf.tree)
+            for q, node in qnames:
+                self.funcs[(mod, q)] = (sf, node)
+                bare = q.rsplit(".", 1)[-1]
+                if (bare in ctx.entry_point_names
+                        or bare in pallas_bodies
+                        or any(_is_jit_decorator(d)
+                               for d in node.decorator_list)):
+                    self.entries.add((mod, q))
+
+    def _resolve(self, mod: str, caller_q: str,
+                 call: ast.Call) -> Optional[FuncKey]:
+        funcs = self.by_module.get(mod, {})
+        f = call.func
+        if isinstance(f, ast.Name):
+            n = f.id
+            # nested def / sibling in the enclosing scope chain
+            scope = caller_q.split(".")
+            for i in range(len(scope), 0, -1):
+                q = ".".join(scope[:i] + [n])
+                if q in funcs:
+                    return (mod, q)
+            if n in funcs:
+                return (mod, n)
+            sym = self.symbols.get(mod, {}).get(n)
+            if sym and sym[0] in self.by_module:
+                smod, sname = sym
+                if sname in self.by_module[smod]:
+                    return (smod, sname)
+            return None
+        if isinstance(f, ast.Attribute):
+            if isinstance(f.value, ast.Name):
+                base = f.value.id
+                if base == "self" and "." in caller_q:
+                    cls = caller_q.rsplit(".", 2)[0]
+                    q = f"{cls}.{f.attr}"
+                    if q in funcs:
+                        return (mod, q)
+                    return None
+                # module alias: from repro.kernels import autotune
+                sym = self.symbols.get(mod, {}).get(base)
+                if sym:
+                    smod = f"{sym[0]}.{sym[1]}"
+                    if (smod in self.by_module
+                            and f.attr in self.by_module[smod]):
+                        return (smod, f.attr)
+                ali = self.aliases.get(mod, {}).get(base)
+                if (ali and ali in self.by_module
+                        and f.attr in self.by_module[ali]):
+                    return (ali, f.attr)
+        return None
+
+    def reachable(self) -> Set[FuncKey]:
+        seen: Set[FuncKey] = set()
+        stack = list(self.entries)
+        while stack:
+            key = stack.pop()
+            if key in seen:
+                continue
+            seen.add(key)
+            mod, q = key
+            _, node = self.funcs[key]
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    tgt = self._resolve(mod, q, sub)
+                    if tgt and tgt not in seen:
+                        stack.append(tgt)
+        return seen
+
+
+class VL003TracePurity:
+    """Impure constructs reachable from jitted entry points."""
+
+    id = "VL003"
+    name = "trace-purity"
+
+    @classmethod
+    def run(cls, ctx: Context) -> List[Finding]:
+        graph = _Graph(ctx)
+        findings: List[Finding] = []
+        seen_keys: Set[Tuple[str, int, str]] = set()
+
+        def emit(sf, line: int, msg: str) -> None:
+            key = (sf.rel, line, msg)
+            if key not in seen_keys:
+                seen_keys.add(key)
+                findings.append(Finding(cls.id, sf.rel, line, msg))
+
+        for (mod, q) in sorted(graph.reachable()):
+            sf, node = graph.funcs[(mod, q)]
+            aliases = graph.aliases.get(mod, {})
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Global):
+                    emit(sf, sub.lineno,
+                         f"global mutation in {q} (reachable from a "
+                         f"jitted entry point) runs once per trace, "
+                         f"not per call")
+                elif isinstance(sub, ast.Call):
+                    cls._check_call(emit, sf, q, sub, aliases)
+                elif isinstance(sub, (ast.If, ast.While)):
+                    cls._check_branch(emit, sf, q, sub, aliases)
+        return findings
+
+    @staticmethod
+    def _check_call(emit, sf, q: str, call: ast.Call,
+                    aliases: Dict[str, str]) -> None:
+        d = dotted_name(call.func)
+        if not d:
+            return
+        parts = d.split(".")
+        root = aliases.get(parts[0], parts[0])
+        if root == "time":
+            emit(sf, call.lineno,
+                 f"wall-clock call {d}() in jit-reachable {q}: the "
+                 f"traced value freezes at compile time")
+        elif root == "random":
+            emit(sf, call.lineno,
+                 f"stdlib random call {d}() in jit-reachable {q}: "
+                 f"unseeded global RNG bakes one draw into the trace")
+        elif (root == "numpy" and len(parts) >= 3
+              and parts[1] == "random"
+              and parts[2] not in _NP_RANDOM_OK):
+            emit(sf, call.lineno,
+                 f"legacy np.random global-RNG call {d}() in "
+                 f"jit-reachable {q}: use np.random.default_rng(seed)")
+        elif (root == "numpy.random" and len(parts) >= 2
+              and parts[1] not in _NP_RANDOM_OK):
+            emit(sf, call.lineno,
+                 f"legacy np.random global-RNG call {d}() in "
+                 f"jit-reachable {q}: use np.random.default_rng(seed)")
+
+    @staticmethod
+    def _check_branch(emit, sf, q: str, stmt, aliases: Dict[str, str]
+                      ) -> None:
+        kind = "if" if isinstance(stmt, ast.If) else "while"
+        for sub in ast.walk(stmt.test):
+            if not isinstance(sub, ast.Call):
+                continue
+            d = dotted_name(sub.func)
+            if not d:
+                continue
+            parts = d.split(".")
+            root = aliases.get(parts[0], parts[0])
+            if (root == "jax.numpy"
+                    or (root == "jax" and len(parts) >= 2
+                        and parts[1] == "numpy")):
+                emit(sf, stmt.lineno,
+                     f"Python {kind} on array-valued {d}(...) in "
+                     f"jit-reachable {q}: branches on traced values "
+                     f"fail (or specialize) under jit; use jnp.where / "
+                     f"lax.cond")
+                return

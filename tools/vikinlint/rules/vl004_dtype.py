@@ -1,0 +1,55 @@
+"""VL004: contractions in kernel code must pin the accumulator dtype.
+
+On the MXU, ``jnp.dot`` on bf16/f16/int8 operands picks its accumulator
+from a backend default unless ``preferred_element_type`` pins it.  The
+repo's bitwise kernel==oracle contracts all assume f32 accumulation
+(DESIGN.md Secs. 16-17): an unpinned contraction inside
+``src/repro/kernels/`` is at best an implicit dependency on today's
+default and at worst a silent low-precision accumulation that the
+tolerance-based tests won't catch on small shapes.
+
+The rule flags every ``dot`` / ``matmul`` / ``dot_general`` call under
+``src/repro/kernels/`` that lacks an explicit
+``preferred_element_type=`` keyword.  (``einsum`` on pre-widened f32
+operands is exempt: its accumulator is the operand dtype by
+construction.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from vikinlint.context import Context, Finding, dotted_name
+
+_CONTRACTIONS = frozenset({"dot", "matmul", "dot_general"})
+
+
+class VL004DtypeDiscipline:
+    """Unpinned accumulator dtypes in kernel contractions."""
+
+    id = "VL004"
+    name = "dtype-discipline"
+
+    @classmethod
+    def run(cls, ctx: Context) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in ctx.files_under("src/repro/kernels"):
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted_name(node.func)
+                if not d:
+                    continue
+                leaf = d.rsplit(".", 1)[-1]
+                if leaf not in _CONTRACTIONS:
+                    continue
+                if any(k.arg == "preferred_element_type"
+                       for k in node.keywords):
+                    continue
+                findings.append(Finding(
+                    cls.id, sf.rel, node.lineno,
+                    f"{d}(...) without preferred_element_type: kernel "
+                    f"contractions must pin their accumulator dtype "
+                    f"(f32) or the bitwise oracle contract rests on a "
+                    f"backend default"))
+        return findings

@@ -1,0 +1,93 @@
+"""VL005: every produced report field must have a consumer.
+
+The cycle-model reports (``serving_report``, the backends'
+``batch_report`` / ``cycle_attribution``) are the repo's claims surface:
+each key is either pinned by a test, gated by a bench, or it is dead
+weight that silently drifts until someone quotes a wrong number in the
+paper writeup.  This rule extracts every string key those producers emit
+-- dict literals, ``out["k"] = v`` subscript stores, and
+``out.update(k=v)`` keyword stores -- and requires each to appear as a
+quoted string somewhere under ``tests/`` or ``benchmarks/``.
+
+Producers are registered in ``vikinlint.registry.REPORT_PRODUCERS``; a
+producer that has vanished from its file is itself a finding (stale
+registration).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List
+
+from vikinlint.context import Context, Finding, functions_with_qualnames
+
+
+def _produced_keys(fn: ast.AST) -> Dict[str, int]:
+    """key -> first line where the producer emits it."""
+    keys: Dict[str, int] = {}
+
+    def add(k: str, line: int) -> None:
+        keys.setdefault(k, line)
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if (isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)):
+                    add(k.value, k.lineno)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.slice, ast.Constant)
+                        and isinstance(t.slice.value, str)):
+                    add(t.slice.value, t.lineno)
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "update"):
+            for kw in node.keywords:
+                if kw.arg is not None:
+                    add(kw.arg, node.lineno)
+    return keys
+
+
+class VL005ReportFieldDrift:
+    """Report fields no test or bench consumes."""
+
+    id = "VL005"
+    name = "report-field-drift"
+
+    @classmethod
+    def run(cls, ctx: Context) -> List[Finding]:
+        findings: List[Finding] = []
+        consumers = ctx.consumer_texts()
+
+        def consumed(key: str) -> bool:
+            pat = re.compile(r"[\"']" + re.escape(key) + r"[\"']")
+            return any(pat.search(t) for t in consumers)
+
+        for path, qual in ctx.report_producers:
+            sf = ctx.file(path)
+            if sf is None or sf.tree is None:
+                findings.append(Finding(
+                    cls.id, path, 1,
+                    f"registered report producer {qual} not found (file "
+                    f"missing from lint set); update "
+                    f"tools/vikinlint/registry.py"))
+                continue
+            fn = next((n for q, n in functions_with_qualnames(sf.tree)
+                       if q == qual), None)
+            if fn is None:
+                findings.append(Finding(
+                    cls.id, sf.rel, 1,
+                    f"registered report producer {qual} no longer "
+                    f"exists; update tools/vikinlint/registry.py"))
+                continue
+            for key, line in sorted(_produced_keys(fn).items(),
+                                    key=lambda kv: kv[1]):
+                if not consumed(key):
+                    findings.append(Finding(
+                        cls.id, sf.rel, line,
+                        f"report field '{key}' produced by {qual} is "
+                        f"consumed by no test or bench -- pin it or "
+                        f"drop it"))
+        return findings
